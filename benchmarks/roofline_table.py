@@ -1,0 +1,54 @@
+"""§Roofline — the full baseline table from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits,
+per (arch x shape x mesh): the three roofline terms, the dominant term,
+MODEL_FLOPS = 6·N(_active)·D (train) or 2·N(_active)·tokens (decode/
+prefill-forward-only: 2·N·D), and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs · chips).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import base as cb
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    spec = cb.SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if spec.kind == "train":
+        return 6.0 * n * spec.seq_len * spec.global_batch
+    if spec.kind == "prefill":
+        return 2.0 * n * spec.seq_len * spec.global_batch
+    return 2.0 * n * spec.global_batch  # decode: one token per sequence
+
+
+def run(dryrun_dir: str = "experiments/dryrun") -> list[str]:
+    cb.load_all()
+    rows = ["arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+            "model_tflops,useful_ratio,fits_hbm"]
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(path))
+        cfg = cb.get_config(r["arch"])
+        mf = model_flops(cfg, r["shape"])
+        hlo_total = r["flops_per_device"] * r["chips"]
+        ratio = mf / hlo_total if hlo_total else float("nan")
+        rf = r["roofline"]
+        rows.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{rf['compute_s']:.3e},{rf['memory_s']:.3e},"
+            f"{rf['collective_s']:.3e},{rf['dominant']},"
+            f"{mf / 1e12:.1f},{ratio:.2f},"
+            f"{r['memory'].get('fits_hbm')}")
+    return rows
+
+
+def main(print_fn=print):
+    for row in run():
+        print_fn(row)
+
+
+if __name__ == "__main__":
+    main()

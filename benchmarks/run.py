@@ -1,0 +1,105 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark module) and
+writes each module's full output under experiments/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def _capture(mod_main):
+    lines: list[str] = []
+    mod_main(print_fn=lines.append)
+    return lines
+
+
+def bench_fig4():
+    from benchmarks import fig4_extensions
+    lines = _capture(fig4_extensions.main)
+    minver = [l for l in lines if l.startswith("minver,")][0].split(",")
+    return lines, f"minver_speedup_F={minver[6]} (paper 27.5)"
+
+
+def bench_fig5():
+    from benchmarks import fig5_classification
+    lines = _capture(fig5_classification.main)
+    return lines, [l for l in lines if l.startswith("# classes")][0][2:]
+
+
+def bench_fig6():
+    from benchmarks import fig6_single
+    lines = _capture(fig6_single.main)
+    s2_50 = [l for l in lines if l.startswith("AVERAGE,s2,50")][0]
+    return lines, f"avg_s2@50c={s2_50.split(',')[-1]} (paper ~0.71)"
+
+
+def bench_fig7():
+    from benchmarks import fig7_multi
+    lines, _ = fig7_multi.run()   # full rows (main() prints only the tail)
+    head = [l for l in lines if l.startswith("# 4slot@20K")][0]
+    return lines, head[2:]
+
+
+def bench_expert_slots():
+    from benchmarks import bench_expert_slots as mod
+    lines = _capture(mod.main)
+    return lines, lines[1] if len(lines) > 1 else ""
+
+
+def bench_bitstream_study():
+    from benchmarks import bitstream_study
+    lines = _capture(bitstream_study.main)
+    return lines, [l for l in lines if l.startswith("# finding")][0][2:]
+
+
+def bench_perf_slot_decode():
+    from benchmarks import perf_slot_decode
+    lines = _capture(perf_slot_decode.main)
+    best = [l for l in lines if l.startswith("slots,2,4.0")]
+    return lines, (best[0] if best else "")
+
+
+def bench_roofline():
+    from benchmarks import roofline_table
+    lines = _capture(roofline_table.main)
+    return lines, f"{len(lines) - 1} dry-run cells tabulated"
+
+
+BENCHES = {
+    "fig4_extensions": bench_fig4,
+    "fig5_classification": bench_fig5,
+    "fig6_single": bench_fig6,
+    "fig7_multi": bench_fig7,
+    "expert_slots": bench_expert_slots,
+    "bitstream_study": bench_bitstream_study,
+    "perf_slot_decode": bench_perf_slot_decode,
+    "roofline_table": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        lines, derived = fn()
+        us = (time.time() - t0) * 1e6
+        with open(os.path.join(args.out, f"{name}.csv"), "w") as f:
+            f.write("\n".join(lines) + "\n")
+        derived = str(derived).replace(",", ";")
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Reproduce the paper's evaluation (Figs. 4-7) end to end and print the
+validation against every number stated in the text.
+
+    PYTHONPATH=src python examples/paper_repro.py
+"""
+import numpy as np
+
+from benchmarks import fig4_extensions, fig5_classification, fig6_single, fig7_multi
+
+
+def main():
+    print("== Fig 4: fixed-ISA speedups ==")
+    rows = fig4_extensions.run()
+    for r in rows:
+        if r.startswith(("minver", "matmult-int", "wikisort")):
+            print("  " + r)
+    print("== Fig 5: classification ==")
+    print("  " + fig5_classification.run()[-1])
+    print("== Fig 6: slot scenarios (speedup vs RV32IMF) ==")
+    rows, _ = fig6_single.run()
+    for r in rows:
+        if r.startswith(("AVERAGE", "#")):
+            print("  " + r)
+    print("== Fig 7: multi-program (50 pairs) ==")
+    rows, _ = fig7_multi.run()
+    for r in rows:
+        if r.startswith(("AVERAGE", "#")):
+            print("  " + r)
+
+
+if __name__ == "__main__":
+    main()

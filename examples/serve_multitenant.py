@@ -1,0 +1,44 @@
+"""Multi-tenant slot-resident MoE serving demo — the paper's architecture
+(disambiguator + slots + round-robin quantum) applied to expert serving.
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import base as cb
+from repro.models import transformer
+from repro.serve.engine import EngineConfig, SlotServeEngine, Tenant
+
+cb.load_all()
+
+
+def main():
+    cfg = cb.get_config("llama4-maverick-400b-a17b").smoke()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tenants = []
+    for i in range(3):  # three "processes" with distinct expert mixes
+        bias = np.full((cfg.num_experts,), -6.0, np.float32)
+        bias[i * 3:(i * 3) + 4] = 6.0
+        tenants.append(Tenant(
+            name=f"tenant{i}",
+            tokens=rng.integers(0, cfg.vocab, (2, 8)).astype(np.int32),
+            router_bias=bias))
+
+    for slots in (2, 4):
+        for bias in (0.0, 4.0):
+            eng = SlotServeEngine(
+                cfg, params,
+                EngineConfig(quantum_tokens=16, slots_per_shard=slots,
+                             hit_bias=bias),
+                [Tenant(t.name, t.tokens, t.router_bias) for t in tenants],
+                max_len=70)
+            rep = eng.run(60)
+            print(f"slots={slots} hit_bias={bias}: "
+                  f"hit_rate={rep['hit_rate']:.3f} fills={rep['fills']} "
+                  f"modelled fill time={rep['fill_seconds'] * 1e3:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full production stack (sharded step fn, deterministic pipeline,
+checkpoint/restart, straggler monitoring).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+On this CPU container a ~100M model at seq 128 runs ~seconds/step; pass
+--tiny for a fast sanity run, or run on a real slice for full speed.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import base as cb
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+    args = ap.parse_args()
+
+    cb.load_all()
+    base = cb.get_config("granite-3-2b")
+    if args.tiny:
+        arch = "granite-3-2b"
+    else:  # ~100M params: 8 x 512 with a 16k vocab
+        cfg = dataclasses.replace(
+            base, name="granite-100m", num_layers=8, d_model=512,
+            num_heads=8, num_kv_heads=4, d_ff=2048, vocab=16384,
+            head_dim=64, dtype="float32", remat="none", loss_chunk=0,
+            skip_shapes={})
+        cb.register(cfg)
+        arch = cfg.name
+    report = train_mod.run(
+        arch, smoke=args.tiny, steps=args.steps, batch=4, seq=128,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
+    print(f"final loss {report['losses'][-1]:.4f} after "
+          f"{report['final_step']} steps "
+          f"({report['restarts']} restarts, "
+          f"{len(report['straggler_events'])} straggler events)")
+
+
+if __name__ == "__main__":
+    main()

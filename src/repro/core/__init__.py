@@ -1,0 +1,8 @@
+"""The paper's primary contribution: the FPGA-extended modified Harvard
+architecture, as (a) a faithful cycle-approximate simulation stack
+(isa/traces/slots/simulator/scheduler/bitstream) and (b) its TPU-native
+adaptation, slot-resident expert serving (expert_slots).  See DESIGN.md §2.
+"""
+from repro.core import (  # noqa: F401
+    bitstream, expert_slots, isa, scheduler, simulator, slots, traces,
+)

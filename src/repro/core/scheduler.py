@@ -1,0 +1,56 @@
+"""Multi-program experiment construction (paper §VI-C).
+
+The paper pairs benchmarks under FreeRTOS's round-robin scheduler:
+
+  * C(5,2) = 10 pairs among the five "improved by F and M" benchmarks, and
+  * 5 x 8 = 40 pairs of one FM-class with one M-only-class benchmark,
+
+for 50 combinations total; pairs that do not compete for slots (M-only with
+M-only, or anything with an insensitive benchmark) are omitted, because every
+granularity scenario fits the whole "M" extension.
+
+`SchedulerConfig` itself lives in `repro.core.simulator`; this module builds
+the pair set and the per-pair trace tensors.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.core import traces
+from repro.core.simulator import SchedulerConfig  # noqa: F401  (re-export)
+
+
+def make_pairs() -> list[tuple[str, str]]:
+    """The paper's 50 benchmark combinations (§VI-C)."""
+    fm = traces.FM_BENCHES
+    m = traces.M_BENCHES
+    pairs = list(itertools.combinations(fm, 2))          # 10
+    pairs += [(a, b) for a in fm for b in m]             # 40
+    assert len(pairs) == 50
+    return pairs
+
+
+def fm_fm_pairs() -> list[tuple[str, str]]:
+    return list(itertools.combinations(traces.FM_BENCHES, 2))
+
+
+def fm_m_pairs() -> list[tuple[str, str]]:
+    return [(a, b) for a in traces.FM_BENCHES for b in traces.M_BENCHES]
+
+
+def pair_traces(pairs: list[tuple[str, str]], length: int = 150_000,
+                seed: int = 0) -> np.ndarray:
+    """(B, 2, N) int32 trace tensor for `simulate_pair_batch`.
+
+    Traces are cached per benchmark (they are deterministic per seed).
+    """
+    cache: dict[str, np.ndarray] = {}
+
+    def get(name: str) -> np.ndarray:
+        if name not in cache:
+            cache[name] = traces.build_trace(name, length, seed)
+        return cache[name]
+
+    return np.stack([np.stack([get(a), get(b)]) for a, b in pairs])

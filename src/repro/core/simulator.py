@@ -1,0 +1,250 @@
+"""Cycle-approximate simulator of the FPGA-extended reconfigurable core.
+
+Mirrors the paper's methodology (§V): the softcore supports all RV32IMF
+instructions; the instruction disambiguator acts as an L0 cache over
+reconfigurable slots and *adds latency* on slot misses, abstracting the
+reconfiguration technology behind a configurable miss-latency constant
+(10 / 50 / 250 cycles studied).  Two execution modes:
+
+  * fixed-ISA machines (RV32I/IM/IF/IMF baselines of Fig. 4) — analytic:
+    absent extensions expand to ABI soft routines; no slots, no misses;
+  * the reconfigurable core (Fig. 6/7) — `lax.scan` over a synthesised
+    instruction trace with exact-LRU disambiguator + bitstream-cache state.
+
+Multi-programming (Fig. 7) adds a FreeRTOS-style round-robin scheduler with
+a cycle quantum and a context-switch handler cost; slot state deliberately
+persists across switches (the architecture's whole point — shared extensions
+stay resident, §IV).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa, slots
+from repro.core.traces import Mix, analytic_cpi  # re-export for callers
+
+__all__ = [
+    "ReconfigConfig", "SchedulerConfig", "SimResult", "PairResult",
+    "simulate_single", "simulate_single_batch",
+    "simulate_pair", "simulate_pair_batch",
+    "analytic_cpi", "fixed_pair_cpi",
+]
+
+
+@dataclass(frozen=True)
+class ReconfigConfig:
+    """Reconfigurable-core parameters (paper §V-A, §V-D)."""
+
+    num_slots: int
+    miss_latency: int          # disambiguator-miss cycles (reconfig incl.)
+    bs_cache_entries: int = 64  # bitstream-cache entries (>= tags: warm mode)
+    bs_miss_extra: int = 100    # added cycles when the bitstream cache misses
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Round-robin OS scheduler model (paper §V-B, §VI-C)."""
+
+    quantum_cycles: int = 20_000
+    handler_cycles: int = 150   # timer-interrupt + context-switch routine
+                                # (incl. the 32 FP registers added in §V-B)
+
+
+class SimResult(NamedTuple):
+    cycles: jnp.ndarray
+    instructions: jnp.ndarray
+    slot_misses: jnp.ndarray
+    bs_misses: jnp.ndarray
+
+    @property
+    def cpi(self):
+        return self.cycles / jnp.maximum(self.instructions, 1)
+
+
+class PairResult(NamedTuple):
+    cycles: jnp.ndarray        # (P,) attributed cycles (incl. handler)
+    instructions: jnp.ndarray  # (P,)
+    slot_misses: jnp.ndarray   # (P,)
+    switches: jnp.ndarray      # () context switches
+
+    @property
+    def cpi(self):
+        return self.cycles / jnp.maximum(self.instructions, 1)
+
+
+# ---------------------------------------------------------------------------
+# Single-program reconfigurable core
+# ---------------------------------------------------------------------------
+
+
+def _step_tables(instr_tag: np.ndarray):
+    hw = jnp.asarray(isa.INSTR_HW_CYCLES, jnp.int32)
+    tags = jnp.asarray(instr_tag, jnp.int32)
+    return hw, tags
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots", "bs_entries"))
+def _simulate_single(trace, instr_tag, miss_latency, num_slots: int,
+                     bs_entries: int, bs_miss_extra):
+    hw, tags = _step_tables(instr_tag)
+    init = (
+        slots.init(num_slots),
+        slots.init(bs_entries),
+        jnp.int32(0),  # cycles
+        jnp.int32(0),  # slot misses
+        jnp.int32(0),  # bitstream-cache misses
+    )
+
+    def step(carry, ins):
+        slot_st, bs_st, cycles, miss, bsmiss = carry
+        tag = tags[ins]
+        res = slots.lookup(slot_st, tag)
+        # on a disambiguator miss the bitstream is fetched through the
+        # bitstream cache; a miss there goes to the unified L2 (extra cost)
+        bs_res = slots.lookup(bs_st, jnp.where(res.hit, jnp.int32(-1), tag))
+        cost = hw[ins]
+        cost = cost + jnp.where(res.hit, 0, miss_latency).astype(jnp.int32)
+        cost = cost + jnp.where(res.hit | bs_res.hit, 0,
+                                bs_miss_extra).astype(jnp.int32)
+        return (
+            res.state, bs_res.state, cycles + cost,
+            miss + (~res.hit).astype(jnp.int32),
+            bsmiss + (~(res.hit | bs_res.hit)).astype(jnp.int32),
+        ), None
+
+    (slot_st, bs_st, cycles, miss, bsmiss), _ = jax.lax.scan(step, init, trace)
+    n = jnp.int32(trace.shape[0])
+    return SimResult(cycles, n, miss, bsmiss)
+
+
+def simulate_single(trace: np.ndarray, cfg: ReconfigConfig,
+                    scenario: isa.SlotScenario) -> SimResult:
+    return _simulate_single(
+        jnp.asarray(trace, jnp.int32), scenario.instr_tag,
+        jnp.int32(cfg.miss_latency), cfg.num_slots,
+        cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra))
+
+
+def simulate_single_batch(traces: np.ndarray, miss_latencies: np.ndarray,
+                          cfg: ReconfigConfig,
+                          scenario: isa.SlotScenario) -> SimResult:
+    """vmap over (trace, miss latency) lanes with a shared scenario."""
+    fn = jax.vmap(
+        lambda t, L: _simulate_single(
+            t, scenario.instr_tag, L, cfg.num_slots,
+            cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra)))
+    return fn(jnp.asarray(traces, jnp.int32),
+              jnp.asarray(miss_latencies, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Multi-program (round-robin scheduler)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps"))
+def _simulate_pair(traces, instr_tag, miss_latency, quantum, handler,
+                   num_slots: int, bs_entries: int, bs_miss_extra,
+                   total_steps: int):
+    hw, tags = _step_tables(instr_tag)
+    num_progs, trace_len = traces.shape
+
+    class Carry(NamedTuple):
+        slot_st: slots.SlotState
+        bs_st: slots.SlotState
+        cursors: jnp.ndarray   # (P,)
+        active: jnp.ndarray    # ()
+        q_cycles: jnp.ndarray  # ()
+        cycles: jnp.ndarray    # (P,)
+        instrs: jnp.ndarray    # (P,)
+        misses: jnp.ndarray    # (P,)
+        switches: jnp.ndarray  # ()
+
+    init = Carry(
+        slots.init(num_slots), slots.init(bs_entries),
+        jnp.zeros((num_progs,), jnp.int32), jnp.int32(0), jnp.int32(0),
+        jnp.zeros((num_progs,), jnp.int32),
+        jnp.zeros((num_progs,), jnp.int32),
+        jnp.zeros((num_progs,), jnp.int32),
+        jnp.int32(0),
+    )
+
+    def step(c: Carry, _):
+        p = c.active
+        ins = traces[p, jnp.remainder(c.cursors[p], trace_len)]
+        tag = tags[ins]
+        res = slots.lookup(c.slot_st, tag)
+        bs_res = slots.lookup(
+            c.bs_st, jnp.where(res.hit, jnp.int32(-1), tag))
+        cost = hw[ins]
+        cost = cost + jnp.where(res.hit, 0, miss_latency).astype(jnp.int32)
+        cost = cost + jnp.where(res.hit | bs_res.hit, 0,
+                                bs_miss_extra).astype(jnp.int32)
+
+        q = c.q_cycles + cost
+        do_switch = q >= quantum
+        # the outgoing program pays the interrupt-handler cycles, mirroring
+        # the paper's observation that short quanta inflate all runtimes
+        cost_p = cost + jnp.where(do_switch, handler, 0).astype(jnp.int32)
+
+        return Carry(
+            slot_st=res.state,
+            bs_st=bs_res.state,
+            cursors=c.cursors.at[p].add(1),
+            active=jnp.where(do_switch, (p + 1) % num_progs, p),
+            q_cycles=jnp.where(do_switch, 0, q),
+            cycles=c.cycles.at[p].add(cost_p),
+            instrs=c.instrs.at[p].add(1),
+            misses=c.misses.at[p].add((~res.hit).astype(jnp.int32)),
+            switches=c.switches + do_switch.astype(jnp.int32),
+        ), None
+
+    final, _ = jax.lax.scan(step, init, None, length=total_steps)
+    return PairResult(final.cycles, final.instrs, final.misses,
+                      final.switches)
+
+
+def simulate_pair(traces: np.ndarray, cfg: ReconfigConfig,
+                  scenario: isa.SlotScenario, sched: SchedulerConfig,
+                  total_steps: int = 400_000) -> PairResult:
+    return _simulate_pair(
+        jnp.asarray(traces, jnp.int32), scenario.instr_tag,
+        jnp.int32(cfg.miss_latency), jnp.int32(sched.quantum_cycles),
+        jnp.int32(sched.handler_cycles), cfg.num_slots,
+        cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra), total_steps)
+
+
+def simulate_pair_batch(traces: np.ndarray, cfg: ReconfigConfig,
+                        scenario: isa.SlotScenario, sched: SchedulerConfig,
+                        total_steps: int = 400_000) -> PairResult:
+    """traces: (B, P, N) — vmap over pair lanes."""
+    fn = jax.vmap(
+        lambda t: _simulate_pair(
+            t, scenario.instr_tag, jnp.int32(cfg.miss_latency),
+            jnp.int32(sched.quantum_cycles), jnp.int32(sched.handler_cycles),
+            cfg.num_slots, cfg.bs_cache_entries,
+            jnp.int32(cfg.bs_miss_extra), total_steps))
+    return fn(jnp.asarray(traces, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Fixed-ISA analytic helpers (Fig. 4 baselines; pair variant for Fig. 7)
+# ---------------------------------------------------------------------------
+
+
+def fixed_pair_cpi(mix: Mix, spec: isa.Spec, sched: SchedulerConfig) -> float:
+    """CPI of a fixed-ISA machine inside a round-robin pair.
+
+    The handler executes `handler_cycles` of base instructions once per
+    quantum; amortised per original instruction that is
+    handler * CPI / quantum.
+    """
+    cpi = analytic_cpi(mix, spec)
+    return cpi * (1.0 + sched.handler_cycles / sched.quantum_cycles)

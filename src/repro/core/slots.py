@@ -1,0 +1,120 @@
+"""Instruction disambiguator — a functional, jittable fully-associative cache.
+
+Paper §IV, Fig. 2: the disambiguator is a small fully-associative L0 cache
+whose tags are instruction opcodes (plus function fields).  On a hit it
+multiplexes the operands to the slot holding the implementation; on a miss it
+requests the bitstream from the bitstream cache and reconfigures the LRU
+victim slot, paying a (technology-dependent) reconfiguration latency.
+
+This module gives exact LRU semantics as a pure function over a small state
+pytree, so the same machinery runs
+
+  * inside the cycle-approximate core simulator (`lax.scan` over a trace),
+  * batched over experiment configurations (`vmap`),
+  * per-device inside `shard_map` for the TPU expert-slot runtime
+    (`repro.core.expert_slots`).
+
+State is intentionally tiny (two int32 vectors + a scalar clock) so it can
+live in registers/SMEM when embedded in kernels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+
+
+class SlotState(NamedTuple):
+    """Disambiguator state.
+
+    tags:     (S,) int32 — tag resident in each slot, -1 when empty.
+    last_use: (S,) int32 — LRU clock value of the slot's last touch.
+    clock:    ()   int32 — monotonically increasing use counter.
+    """
+
+    tags: jnp.ndarray
+    last_use: jnp.ndarray
+    clock: jnp.ndarray
+
+
+def init(num_slots: int) -> SlotState:
+    return SlotState(
+        tags=jnp.full((num_slots,), EMPTY, dtype=jnp.int32),
+        last_use=jnp.zeros((num_slots,), dtype=jnp.int32),
+        clock=jnp.int32(0),
+    )
+
+
+class LookupResult(NamedTuple):
+    state: SlotState
+    hit: jnp.ndarray          # () bool — tag was resident (or unslotted)
+    slot: jnp.ndarray         # () int32 — slot serving the tag (-1 unslotted)
+    evicted_tag: jnp.ndarray  # () int32 — tag displaced on a fill, else -1
+
+
+def lookup(state: SlotState, tag: jnp.ndarray) -> LookupResult:
+    """Access `tag`; fill the LRU victim on a miss.  tag == -1 is unslotted
+    (a hardwired base instruction) and leaves the state untouched but still
+    reports hit=True so callers charge no reconfiguration latency."""
+    tag = jnp.asarray(tag, jnp.int32)
+    unslotted = tag < 0
+
+    matches = state.tags == tag
+    hit_any = jnp.any(matches) & ~unslotted
+    hit_slot = jnp.argmax(matches).astype(jnp.int32)
+
+    # LRU victim: prefer empty slots (their last_use is forced to int32 min)
+    empties = state.tags == EMPTY
+    use_key = jnp.where(empties, jnp.iinfo(jnp.int32).min, state.last_use)
+    victim = jnp.argmin(use_key).astype(jnp.int32)
+
+    slot = jnp.where(hit_any, hit_slot, victim)
+    evicted = jnp.where(
+        hit_any | unslotted, EMPTY, jnp.where(empties[victim], EMPTY, state.tags[victim])
+    )
+
+    clock = state.clock + 1
+    do_touch = ~unslotted
+    new_tags = jnp.where(
+        do_touch & ~hit_any,
+        state.tags.at[slot].set(tag),
+        state.tags,
+    )
+    new_last = jnp.where(
+        do_touch,
+        state.last_use.at[slot].set(clock),
+        state.last_use,
+    )
+    new_state = SlotState(tags=new_tags, last_use=new_last, clock=clock)
+    return LookupResult(
+        state=new_state,
+        hit=hit_any | unslotted,
+        slot=jnp.where(unslotted, EMPTY, slot),
+        evicted_tag=evicted,
+    )
+
+
+def lookup_batch(state: SlotState, tags: jnp.ndarray) -> tuple[SlotState, jnp.ndarray]:
+    """Sequentially access a vector of tags; returns (state, hits bool vector).
+
+    A thin `lax.scan` over `lookup` — used by the expert-slot runtime where a
+    token block touches a sequence of expert ids on one device.
+    """
+
+    def step(st, tag):
+        r = lookup(st, tag)
+        return r.state, r.hit
+
+    return jax.lax.scan(step, state, tags)
+
+
+def occupancy(state: SlotState) -> jnp.ndarray:
+    return jnp.sum(state.tags != EMPTY)
+
+
+def resident(state: SlotState, tag: jnp.ndarray) -> jnp.ndarray:
+    """Non-mutating residency probe (no LRU touch)."""
+    return jnp.any(state.tags == jnp.asarray(tag, jnp.int32)) & (tag >= 0)

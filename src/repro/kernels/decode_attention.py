@@ -1,0 +1,98 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+Grid: (batch, kv_heads, num_kv_blocks) — kv innermost/sequential; partial
+(m, l, acc) statistics live in VMEM scratch across kv blocks.  The query
+block is (G, dh) — all the GQA query heads of one kv head — so the MXU
+contraction is (G, dh) x (dh, block_kv).  Invalid cache positions
+(>= kv_len) are masked; this is the per-shard partial of the sharded
+flash-decode in `repro.models.kvcache` (the cross-shard logsumexp combine
+stays in shard_map/psum — a collective, not kernel, concern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_kv, num_kv, scale):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[pl.program_id(0)]
+
+    @pl.when(kb * block_kv < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, dh)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bk)
+        kpos = kb * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(kb == num_kv - 1)
+    def _finalise():
+        o_ref[0, 0, ...] = (acc_scr[...] / jnp.maximum(
+            l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_len, *, block_kv=512,
+                     interpret=False):
+    """q: (B, H, dh) one token; k/v_cache: (B, S, KH, dh); kv_len: (B,)
+    number of valid positions.  Returns (B, H, dh)."""
+    b, h, dh = q.shape
+    _, s, kh, _ = k_cache.shape
+    g = h // kh
+    block_kv = min(block_kv, s)
+    assert s % block_kv == 0
+    nk = s // block_kv
+
+    qt = q.reshape(b, kh, g, dh)
+    kt = k_cache.transpose(0, 2, 1, 3)    # (B, KH, S, dh)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, block_kv=block_kv, num_kv=nk,
+                               scale=dh ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # kv_len scalar-prefetch
+            pl.BlockSpec((1, 1, g, dh), lambda b_, h_, k_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b_, h_, k_: (b_, h_, k_, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b_, h_, k_: (b_, h_, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda b_, h_, k_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, qt.reshape(b, kh, g, dh), kt, vt)
+    return out.reshape(b, h, dh)

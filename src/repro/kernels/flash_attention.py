@@ -1,0 +1,121 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — kv innermost
+(sequential on TPU), with running flash statistics (m, l, acc) in VMEM
+scratch; the output block is written once on the last kv step.
+
+BlockSpecs tile Q/K/V to (block_q, head_dim) / (block_kv, head_dim) VMEM
+windows per (b, h); head_dim is MXU-lane aligned (64/128/256 across the
+assigned archs).  GQA is expressed in the K/V index_map (kv head =
+q head // group).  The causal band also *skips* fully-masked kv blocks via
+pl.when (no MXU work issued for them).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_q, block_kv, num_kv, causal, window, scale):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal band: kv block strictly above the diagonal has no unmasked
+    # element; windowed attention also skips blocks older than the band
+    q_lo = qb * block_q
+    k_lo = kb * block_kv
+    in_band = jnp.bool_(True)
+    if causal:
+        in_band &= k_lo <= q_lo + block_q - 1
+    if window:
+        in_band &= (k_lo + block_kv - 1) > (q_lo - window)
+
+    @pl.when(in_band)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        qpos = q_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(kb == num_kv - 1)
+    def _finalise():
+        o_ref[0, 0, ...] = (acc_scr[...] / jnp.maximum(
+            l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_kv=128, interpret=False):
+    """q: (B, Tq, H, dh); k/v: (B, Tk, KH, dh).  Returns (B, Tq, H, dh)."""
+    b, tq, h, dh = q.shape
+    _, tk, kh, _ = k.shape
+    g = h // kh
+    block_q = min(block_q, tq)
+    block_kv = min(block_kv, tk)
+    assert tq % block_q == 0 and tk % block_kv == 0, (tq, tk)
+    nq, nk = tq // block_q, tk // block_kv
+
+    qt = q.transpose(0, 2, 1, 3)   # (B, H, Tq, dh)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_kv=block_kv, num_kv=nk,
+        causal=causal, window=window, scale=dh ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b_, h_, q_, k_: (b_, h_ // g, k_, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b_, h_, q_, k_: (b_, h_ // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

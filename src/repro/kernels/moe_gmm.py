@@ -1,0 +1,227 @@
+"""Pallas TPU grouped expert FFN (the MoE compute hot-spot).
+
+out[e] = (silu(x[e] @ wg[e]) * (x[e] @ wi[e])) @ wo[e]   per expert e,
+x[e] being that expert's capacity buffer (from the jnp dispatch in
+repro.models.moe — index bookkeeping is scalar work that belongs on the
+host/VPU side, not in this kernel).
+
+Two fused grouped-GEMM stages in one kernel:
+
+  stage A  grid (E, C/bc, F/bf, D/bd): accumulate x@wg and x@wi in two VMEM
+           scratch accumulators over the D (contraction) axis; on the last
+           D step apply silu-gating and write h.
+  stage B  runs as a second pallas_call with grid (E, C/bc, D/bd, F/bf):
+           h @ wo accumulated over F.
+
+Block shapes default to MXU-friendly (bc=128-512, bf/bd=512) and keep the
+working set (x-block + both weight blocks + 2 accumulators) well under
+VMEM:  512*512*4B * 4 ~ 4 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# count-aware variant: skip empty experts entirely
+# ---------------------------------------------------------------------------
+#
+# With slot-hit routing (repro.core.expert_slots) most tokens concentrate on
+# the resident experts, leaving many capacity buffers EMPTY.  The
+# scalar-prefetch grid redirects the weight-block index_map of an empty
+# expert to expert 0's block — the pipeline re-uses the already-resident
+# block instead of streaming new weights from HBM — and pl.when skips the
+# MXU work.  Weight traffic then scales with the *resident working set*
+# (the paper's slot pool), not with E.
+
+
+def _gated_kernel_skip(counts_ref, x_ref, wg_ref, wi_ref, h_ref, accg, acci,
+                       *, nd, gated):
+    e = pl.program_id(0)
+    db = pl.program_id(3)
+
+    @pl.when(db == 0)
+    def _init():
+        accg[...] = jnp.zeros_like(accg)
+        acci[...] = jnp.zeros_like(acci)
+
+    @pl.when(counts_ref[e] > 0)
+    def _compute():
+        x = x_ref[0].astype(jnp.float32)
+        accg[...] += jax.lax.dot(x, wg_ref[0].astype(jnp.float32))
+        if gated:
+            acci[...] += jax.lax.dot(x, wi_ref[0].astype(jnp.float32))
+
+    @pl.when(db == nd - 1)
+    def _fin():
+        if gated:
+            h = jax.nn.silu(accg[...]) * acci[...]
+        else:
+            h = jax.nn.gelu(accg[...])
+        h_ref[0, ...] = jnp.where(counts_ref[e] > 0, h, 0.0).astype(
+            h_ref.dtype)
+
+
+def _out_kernel_skip(counts_ref, h_ref, wo_ref, o_ref, acc, *, nf):
+    e = pl.program_id(0)
+    fb = pl.program_id(3)
+
+    @pl.when(fb == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    @pl.when(counts_ref[e] > 0)
+    def _compute():
+        acc[...] += jax.lax.dot(h_ref[0].astype(jnp.float32),
+                                wo_ref[0].astype(jnp.float32))
+
+    @pl.when(fb == nf - 1)
+    def _fin():
+        o_ref[0, ...] = acc[...].astype(o_ref.dtype)
+
+
+def _gated_kernel(x_ref, wg_ref, wi_ref, h_ref, accg, acci, *, nd, gated):
+    db = pl.program_id(3)
+
+    @pl.when(db == 0)
+    def _init():
+        accg[...] = jnp.zeros_like(accg)
+        acci[...] = jnp.zeros_like(acci)
+
+    x = x_ref[0].astype(jnp.float32)
+    accg[...] += jax.lax.dot(x, wg_ref[0].astype(jnp.float32))
+    if gated:
+        acci[...] += jax.lax.dot(x, wi_ref[0].astype(jnp.float32))
+
+    @pl.when(db == nd - 1)
+    def _fin():
+        if gated:
+            h = jax.nn.silu(accg[...]) * acci[...]
+        else:
+            h = jax.nn.gelu(accg[...])
+        h_ref[0, ...] = h.astype(h_ref.dtype)
+
+
+def _out_kernel(h_ref, wo_ref, o_ref, acc, *, nf):
+    fb = pl.program_id(3)
+
+    @pl.when(fb == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot(h_ref[0].astype(jnp.float32),
+                            wo_ref[0].astype(jnp.float32))
+
+    @pl.when(fb == nf - 1)
+    def _fin():
+        o_ref[0, ...] = acc[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gated", "block_c", "block_f", "block_d", "interpret"))
+def moe_gmm_skip(x, wg, wi, wo, counts, *, gated=True, block_c=128,
+                 block_f=512, block_d=512, interpret=False):
+    """Count-aware grouped FFN: experts with counts[e] == 0 are skipped and
+    their weight blocks never stream (index_map redirection).  Oracle:
+    moe_gmm with the empty experts' outputs ignored (they are zeroed)."""
+    e, c, d = x.shape
+    f = wg.shape[-1]
+    bc, bf, bd = min(block_c, c), min(block_f, f), min(block_d, d)
+    assert c % bc == 0 and f % bf == 0 and d % bd == 0
+    nc, nf, nd = c // bc, f // bf, d // bd
+
+    def live(e_, counts_ref):
+        # redirect empty experts' loads to expert 0's (resident) block
+        return jnp.where(counts_ref[e_] > 0, e_, 0)
+
+    h = pl.pallas_call(
+        functools.partial(_gated_kernel_skip, nd=nd, gated=gated),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(e, nc, nf, nd),
+            in_specs=[
+                pl.BlockSpec((1, bc, bd),
+                             lambda e_, c_, f_, d_, ct: (e_, c_, d_)),
+                pl.BlockSpec((1, bd, bf),
+                             lambda e_, c_, f_, d_, ct: (live(e_, ct), d_, f_)),
+                pl.BlockSpec((1, bd, bf),
+                             lambda e_, c_, f_, d_, ct: (live(e_, ct), d_, f_)),
+            ],
+            out_specs=pl.BlockSpec((1, bc, bf),
+                                   lambda e_, c_, f_, d_, ct: (e_, c_, f_)),
+            scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32),
+                            pltpu.VMEM((bc, bf), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        interpret=interpret,
+    )(counts, x, wg, wi)
+
+    out = pl.pallas_call(
+        functools.partial(_out_kernel_skip, nf=nf),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(e, nc, nd, nf),
+            in_specs=[
+                pl.BlockSpec((1, bc, bf),
+                             lambda e_, c_, d_, f_, ct: (e_, c_, f_)),
+                pl.BlockSpec((1, bf, bd),
+                             lambda e_, c_, d_, f_, ct: (live(e_, ct), f_, d_)),
+            ],
+            out_specs=pl.BlockSpec((1, bc, bd),
+                                   lambda e_, c_, d_, f_, ct: (e_, c_, d_)),
+            scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        interpret=interpret,
+    )(counts, h, wo)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gated", "block_c", "block_f", "block_d", "interpret"))
+def moe_gmm(x, wg, wi, wo, *, gated=True, block_c=128, block_f=512,
+            block_d=512, interpret=False):
+    """x: (E, C, D); wg/wi: (E, D, F); wo: (E, F, D) -> (E, C, D)."""
+    e, c, d = x.shape
+    f = wg.shape[-1]
+    bc = min(block_c, c)
+    bf = min(block_f, f)
+    bd = min(block_d, d)
+    assert c % bc == 0 and f % bf == 0 and d % bd == 0
+    nc, nf, nd = c // bc, f // bf, d // bd
+
+    h = pl.pallas_call(
+        functools.partial(_gated_kernel, nd=nd, gated=gated),
+        grid=(e, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e_, c_, f_, d_: (e_, c_, d_)),
+            pl.BlockSpec((1, bd, bf), lambda e_, c_, f_, d_: (e_, d_, f_)),
+            pl.BlockSpec((1, bd, bf), lambda e_, c_, f_, d_: (e_, d_, f_)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf),
+                               lambda e_, c_, f_, d_: (e_, c_, f_)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32),
+                        pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, wg, wi)
+
+    out = pl.pallas_call(
+        functools.partial(_out_kernel, nf=nf),
+        grid=(e, nc, nd, nf),
+        in_specs=[
+            pl.BlockSpec((1, bc, bf), lambda e_, c_, d_, f_: (e_, c_, f_)),
+            pl.BlockSpec((1, bf, bd), lambda e_, c_, d_, f_: (e_, f_, d_)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bd),
+                               lambda e_, c_, d_, f_: (e_, c_, d_)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
+        interpret=interpret,
+    )(h, wo)
+    return out

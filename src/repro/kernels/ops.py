@@ -1,0 +1,60 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+`interpret=None` (default) auto-selects: compiled Pallas on TPU backends,
+interpret mode elsewhere (this container is CPU-only; interpret mode runs
+the kernel bodies exactly, which is what the allclose suite validates).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import rwkv6_scan as _rw
+
+
+def _interp(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_kv=128, interpret=None):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, interpret=_interp(interpret))
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, block_kv=512,
+                     interpret=None):
+    return _dec.decode_attention(
+        q, k_cache, v_cache, kv_len, block_kv=block_kv,
+        interpret=_interp(interpret))
+
+
+def rwkv6_scan(r, k, v, logw, u, *, chunk=64, interpret=None):
+    return _rw.rwkv6_scan(r, k, v, logw, u, chunk=chunk,
+                          interpret=_interp(interpret))
+
+
+def rglru_scan(u, w_r, b_r, w_i, b_i, lam, *, chunk=256, block_w=512,
+               interpret=None):
+    return _rg.rglru_scan(u, w_r, b_r, w_i, b_i, lam, chunk=chunk,
+                          block_w=block_w, interpret=_interp(interpret))
+
+
+def moe_gmm(x, wg, wi, wo, *, gated=True, block_c=128, block_f=512,
+            block_d=512, interpret=None):
+    return _gmm.moe_gmm(x, wg, wi, wo, gated=gated, block_c=block_c,
+                        block_f=block_f, block_d=block_d,
+                        interpret=_interp(interpret))
+
+
+def moe_gmm_skip(x, wg, wi, wo, counts, *, gated=True, block_c=128,
+                 block_f=512, block_d=512, interpret=None):
+    return _gmm.moe_gmm_skip(x, wg, wi, wo, counts, gated=gated,
+                             block_c=block_c, block_f=block_f,
+                             block_d=block_d, interpret=_interp(interpret))

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,Tq,H,dh); k/v: (B,Tk,KH,dh)."""
+    b, tq, h, dh = q.shape
+    _, tk, kh, _ = k.shape
+    g = h // kh
+    qr = q.reshape(b, tq, kh, g, dh).astype(jnp.float32) * dh ** -0.5
+    s = jnp.einsum("btkgd,bskd->btkgs", qr, k.astype(jnp.float32))
+    qpos, kpos = jnp.arange(tq), jnp.arange(tk)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, tq, h, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len):
+    """q: (B,H,dh); caches: (B,S,KH,dh); kv_len: (B,)."""
+    b, h, dh = q.shape
+    _, s, kh, _ = k_cache.shape
+    g = h // kh
+    qr = q.reshape(b, kh, g, dh).astype(jnp.float32) * dh ** -0.5
+    sc = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(jnp.float32))
+    valid = jnp.arange(s)[None, :] < kv_len[:, None]
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, dh).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, logw, u):
+    """Per-token recurrence oracle, zero initial state.  All (B,T,H,N)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        att = s + (uf[None] * kt)[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        s = wt[..., :, None] * s + kt[..., :, None] * vt[..., None, :]
+        return s, out
+
+    b, t, h, n = r.shape
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, w))
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    _, out = jax.lax.scan(step, s0, xs)
+    return out.transpose(1, 0, 2, 3)
+
+
+C_RGLRU = 8.0
+
+
+def rglru_scan_ref(u, w_r, b_r, w_i, b_i, lam):
+    """Sequential recurrence oracle, h_0 = 0.  u: (B,T,W)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * w_r + b_r)
+    i = jax.nn.sigmoid(uf * w_i + b_i)
+    log_a = -C_RGLRU * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.zeros_like(uf[:, 0]),
+                         (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def moe_gmm_ref(x, wg, wi, wo, *, gated=True):
+    """x: (E,C,D); wg/wi: (E,D,F); wo: (E,F,D)."""
+    xf = x.astype(jnp.float32)
+    hg = jnp.einsum("ecd,edf->ecf", xf, wg.astype(jnp.float32))
+    if gated:
+        hi = jnp.einsum("ecd,edf->ecf", xf, wi.astype(jnp.float32))
+        h = jax.nn.silu(hg) * hi
+    else:
+        h = jax.nn.gelu(hg)
+    return jnp.einsum("ecf,efd->ecd", h,
+                      wo.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import — jax locks the device
+count at first backend init.  Every cell:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(**abstract inputs)
+        compiled = lowered.compile()
+        compiled.memory_analysis()   # proves it fits
+        compiled.cost_analysis()     # FLOPs/bytes for the roofline
+
+Cells run on the 16x16 single-pod mesh (roofline source) and the 2x16x16
+multi-pod mesh (proves the `pod` axis shards).  Results land as JSON in
+experiments/dryrun/ for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out DIR]
+"""  # noqa: E402
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis import hlo  # noqa: E402
+from repro.configs import base as cb  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.serve import step as serve_step  # noqa: E402
+from repro.sharding.partition import ShardingPlan  # noqa: E402
+from repro.train import step as train_step  # noqa: E402
+
+V5E_HBM = 16 * 1024**3
+
+
+def opt_config_for(cfg) -> adamw.AdamWConfig:
+    """>=100B: bf16 m, no fp32 master; >=300B additionally factor the
+    second moment (Adafactor-style) — without it arctic-480b's optimizer
+    alone exceeds the single-pod HBM budget (DESIGN.md §5)."""
+    big = cfg.param_count() > 100e9
+    return adamw.AdamWConfig(
+        state_dtype="bfloat16" if big else "float32",
+        master_fp32=not big,
+        factored_v=cfg.param_count() > 300e9)
+
+
+def microbatches_for(cfg) -> int:
+    return 2 if cfg.param_count() > 100e9 else 1
+
+
+def lower_cell(arch: str, shape: str, mesh):
+    """Returns (lowered, meta) for one dry-run cell."""
+    cfg = cb.get_config(arch)
+    spec = cb.SHAPES[shape]
+    specs = cfg.input_specs(shape)
+    if spec.kind == "train":
+        plan = ShardingPlan(mesh, cfg, mode="train")
+        jitted, state_shapes, _ = train_step.jit_train_step(
+            cfg, opt_config_for(cfg), plan, specs,
+            microbatches=microbatches_for(cfg))
+        lowered = jitted.lower(state_shapes, specs)
+    elif spec.kind == "prefill":
+        plan = ShardingPlan(mesh, cfg, mode="prefill")
+        jitted, params_shapes = serve_step.jit_prefill_step(cfg, plan, specs)
+        lowered = jitted.lower(params_shapes, specs)
+    else:  # decode
+        plan = ShardingPlan(mesh, cfg, mode="decode")
+        jitted, params_shapes, cache_shapes = serve_step.jit_decode_step(
+            cfg, plan, specs, spec.global_batch, spec.seq_len)
+        lowered = jitted.lower(params_shapes, cache_shapes, specs)
+    return lowered, {"arch": arch, "shape": shape, "kind": spec.kind,
+                     "tokens": spec.global_batch * (
+                         spec.seq_len if spec.kind != "decode" else 1)}
+
+
+def hbm_budget(arch: str, shape: str, chips: int) -> dict:
+    """Analytical per-device HBM budget (bytes) — the auditable fits-16GB
+    number.  CPU-XLA's buffer assignment (temp_bytes) overestimates a TPU
+    compile: it promotes flash/softmax transients to f32 without fusing
+    them and keeps f32 embedding-gradient scatters live; the TPU backend
+    fuses these (see EXPERIMENTS.md §Dry-run note)."""
+    cfg = cb.get_config(arch)
+    spec = cb.SHAPES[shape]
+    n_params = cfg.param_count()
+    p_bytes = 2 * n_params / chips           # bf16 params, fully sharded
+    out = {"params": p_bytes}
+    if spec.kind == "train":
+        opt = opt_config_for(cfg)
+        sd = 2 if opt.state_dtype == "bfloat16" else 4
+        v_bytes = (0.02 if opt.factored_v else sd) * n_params / chips
+        out["opt_mv"] = sd * n_params / chips + v_bytes
+        out["master"] = (4 * n_params / chips) if opt.master_fp32 else 0.0
+        out["grads"] = 2 * n_params / chips   # transient, sharded like params
+        tp = 16
+        b_loc = spec.global_batch / (chips // tp) / microbatches_for(cfg)
+        # per-layer remat checkpoints: seq-sharded residual stream
+        out["act_checkpoints"] = (
+            cfg.num_layers * b_loc * spec.seq_len / tp * cfg.d_model * 2)
+        # working set of one rematerialised layer (hidden + ffn blocks, f32)
+        out["layer_workspace"] = b_loc * spec.seq_len * cfg.d_model * 4 * 3
+    elif spec.kind == "prefill":
+        tp = 16
+        b_loc = spec.global_batch / (chips // tp)
+        out["kv_cache_out"] = (cfg.num_layers * b_loc * spec.seq_len / tp *
+                               2 * max(cfg.num_kv_heads, 1) * cfg.head_dim * 2)
+        out["layer_workspace"] = b_loc * spec.seq_len * cfg.d_model * 4 * 3
+    else:
+        tp = 16
+        b_loc = max(spec.global_batch / (chips // tp), 1)
+        seq_loc = spec.seq_len / tp
+        if cfg.attention_free:
+            h = cfg.d_model // cfg.head_dim
+            out["state"] = (cfg.num_layers * b_loc *
+                            (h * cfg.head_dim ** 2 + 2 * cfg.d_model) * 4)
+        elif cfg.pattern:
+            n_attn = sum(1 for i in range(cfg.num_layers)
+                         if cfg.pattern[i % len(cfg.pattern)] == "attn")
+            out["state"] = ((cfg.num_layers - n_attn) * b_loc *
+                            cfg.lru_width * cfg.conv_width * 4 +
+                            n_attn * b_loc * cfg.window * 2 *
+                            cfg.num_kv_heads * cfg.head_dim * 2)
+        else:
+            out["kv_cache"] = (cfg.num_layers * b_loc * seq_loc * 2 *
+                               cfg.num_kv_heads * cfg.head_dim * 2)
+        out["logits"] = b_loc * cfg.vocab * 4
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def analyse(lowered, compiled, meta, chips: int) -> dict:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    # XLA's cost_analysis counts scan bodies once (not x trip count) — the
+    # graph walker in repro.analysis.hlo applies while-loop multipliers
+    walk = hlo.analyze_module(compiled.as_text())
+    flops = float(walk["flops"])
+    bytes_acc = float(walk["bytes"])
+    out = dict(meta)
+    out.update({
+        "chips": chips,
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": int(walk["collective_bytes"]),
+        "collectives": walk["collectives"],
+        "xla_cost_analysis": {  # reference only: scan bodies counted once
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": hlo.roofline_terms(
+            flops, bytes_acc, walk["collective_bytes"]),
+    })
+    budget = hbm_budget(meta["arch"], meta["shape"], chips)
+    out["memory"]["hbm_budget"] = budget
+    out["memory"]["fits_hbm"] = bool(budget["total"] < V5E_HBM)
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        lowered, meta = lower_cell(arch, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        result = analyse(lowered, compiled, meta, chips)
+    result["mesh"] = "2x16x16" if multi_pod else "16x16"
+    result["lower_s"] = round(t_lower, 1)
+    result["compile_s"] = round(t_compile, 1)
+    fn = f"{arch}_{shape}_{result['mesh'].replace('x','-')}.json"
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cb.load_all()
+    cells = cb.cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch} x {shape} x {'2x16x16' if multi else '16x16'}"
+            try:
+                r = run_cell(arch, shape, multi, args.out)
+                rf = r["roofline"]
+                print(f"OK   {tag}: dominant={rf['dominant']} "
+                      f"compute={rf['compute_s']:.3e}s "
+                      f"mem={rf['memory_s']:.3e}s "
+                      f"coll={rf['collective_s']:.3e}s "
+                      f"peak={r['memory']['temp_bytes']} "
+                      f"(compile {r['compile_s']}s)", flush=True)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures.append((tag, repr(e)))
+                print(f"FAIL {tag}: {e!r}", flush=True)
+                traceback.print_exc()
+    print(f"\n{len(cells) * len(meshes) - len(failures)} passed, "
+          f"{len(failures)} failed")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production meshes.  Functions, not module constants, so importing this
+module never touches jax device state (the dry-run must set XLA_FLAGS
+before anything initialises the backend)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16).
+    Multi-pod: 2 pods x 256 chips as (pod=2, data=16, model=16); `pod`
+    composes with `data` for data parallelism (hierarchical all-reduce)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh over forced host devices (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

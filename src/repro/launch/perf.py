@@ -1,0 +1,113 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: lower a cell under a named variant, re-derive
+the roofline terms, and append the (hypothesis, before, after) record to
+experiments/perf/.
+
+Variants are small, explicit deltas over the paper-faithful baseline:
+
+    base          — the EXPERIMENTS.md §Roofline baseline
+    dp            — pure data parallelism + ZeRO-3 (batch over all 256/512
+                    chips, per-layer weight all-gather) for train cells
+    dp_mb1        — dp with microbatching disabled (weight AGs amortise
+                    over the whole batch; activations are tiny under dp)
+    flash1024     — flash block 1024 (fewer scan trips, bigger transients)
+    nochunk_loss  — disable the chunked loss (isolates its cost)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.perf --arch granite-3-2b \
+        --shape train_4k --variant dp --hypothesis "..."
+"""  # noqa: E402
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis import hlo  # noqa: E402
+from repro.configs import base as cb  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.serve import step as serve_step  # noqa: E402
+from repro.sharding.partition import ShardingPlan  # noqa: E402
+from repro.train import step as train_step  # noqa: E402
+
+
+def lower_variant(arch: str, shape: str, variant: str, mesh):
+    cfg = cb.get_config(arch)
+    spec = cb.SHAPES[shape]
+    if variant == "nochunk_loss":
+        cfg = dataclasses.replace(cfg, loss_chunk=0)
+    if variant.endswith("_noremat"):
+        cfg = dataclasses.replace(cfg, remat="none")
+    specs = cfg.input_specs(shape)
+    if spec.kind == "train":
+        plan = ShardingPlan(mesh, cfg, mode="train")
+        micro = dryrun.microbatches_for(cfg)
+        if variant.startswith("dp"):
+            plan.strategy_override = "dp"
+            plan.strategy = "dp"
+            if variant == "dp_mb1":
+                micro = 1
+            if variant == "dp_mb4":
+                micro = 4
+        jitted, state_shapes, _ = train_step.jit_train_step(
+            cfg, dryrun.opt_config_for(cfg), plan, specs, micro)
+        return jitted.lower(state_shapes, specs)
+    if spec.kind == "prefill":
+        plan = ShardingPlan(mesh, cfg, mode="prefill")
+        jitted, params_shapes = serve_step.jit_prefill_step(cfg, plan, specs)
+        return jitted.lower(params_shapes, specs)
+    plan = ShardingPlan(mesh, cfg, mode="decode")
+    jitted, params_shapes, cache_shapes = serve_step.jit_decode_step(
+        cfg, plan, specs, spec.global_batch, spec.seq_len)
+    return jitted.lower(params_shapes, cache_shapes, specs)
+
+
+def measure(arch: str, shape: str, variant: str, multi_pod=False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        lowered = lower_variant(arch, shape, variant, mesh)
+        compiled = lowered.compile()
+        walk = hlo.analyze_module(compiled.as_text())
+        mem = compiled.memory_analysis()
+    terms = hlo.roofline_terms(walk["flops"], walk["bytes"],
+                               walk["collective_bytes"])
+    return {
+        "arch": arch, "shape": shape, "variant": variant,
+        "flops_per_device": walk["flops"],
+        "bytes_per_device": walk["bytes"],
+        "collective_bytes_per_device": walk["collective_bytes"],
+        "roofline": terms,
+        "xla_temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "compile_s": round(time.time() - t0, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    cb.load_all()
+    r = measure(args.arch, args.shape, args.variant)
+    r["hypothesis"] = args.hypothesis
+    os.makedirs(args.out, exist_ok=True)
+    fn = f"{args.arch}_{args.shape}_{args.variant}.json"
+    with open(os.path.join(args.out, fn), "w") as f:
+        json.dump(r, f, indent=1)
+    rf = r["roofline"]
+    print(f"{args.arch} x {args.shape} [{args.variant}]: "
+          f"compute={rf['compute_s']:.3e}s mem={rf['memory_s']:.3e}s "
+          f"coll={rf['collective_s']:.3e}s dominant={rf['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""End-to-end training driver with the fault-tolerant runtime.
+
+CPU-scale example (the examples/ scripts call this):
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt --batch 8 --seq 128
+
+On a real slice the same driver runs the full config on
+`make_production_mesh()`; everything below is mesh-size agnostic.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import base as cb
+from repro.data import pipeline
+from repro.models import transformer
+from repro.optim import adamw
+from repro.runtime import fault
+from repro.sharding.partition import ShardingPlan
+from repro.train import step as train_step_mod
+
+
+def build(cfg, opt_cfg, mesh, batch: int, seq: int, microbatches: int = 1):
+    plan = ShardingPlan(mesh, cfg, mode="train") if mesh is not None else None
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if not cfg.embed_inputs:
+        specs = {
+            "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                           jnp.dtype(cfg.dtype)),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    if cfg.pos == "mrope":
+        specs["positions"] = jax.ShapeDtypeStruct((batch, seq, 3), jnp.int32)
+    if mesh is not None:
+        jitted, state_shapes, st_sh = train_step_mod.jit_train_step(
+            cfg, opt_cfg, plan, specs, microbatches)
+        batch_sh = plan.input_shardings(specs)
+    else:
+        jitted = jax.jit(train_step_mod.make_train_step(
+            cfg, opt_cfg, None, microbatches), donate_argnums=(0,))
+        state_shapes, st_sh, batch_sh = None, None, None
+    return jitted, plan, specs, batch_sh
+
+
+def batch_for(cfg, dcfg, step, batch_sh, specs):
+    tokens = pipeline.global_batch_at(dcfg, step)
+    out = {}
+    if "tokens" in specs:
+        out["tokens"] = jnp.asarray(tokens)
+    else:
+        key = jax.random.PRNGKey(step)
+        out["embeds"] = jax.random.normal(
+            key, specs["embeds"].shape, specs["embeds"].dtype) * 0.02
+        out["labels"] = jnp.asarray(tokens)
+    if "positions" in specs:
+        b, t = tokens.shape
+        out["positions"] = jnp.broadcast_to(
+            jnp.arange(t, dtype=jnp.int32)[None, :, None], (b, t, 3))
+    if batch_sh is not None:
+        out = {k: jax.device_put(v, batch_sh[k]) for k, v in out.items()}
+    return out
+
+
+def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
+        seq: int = 128, ckpt_dir: str | None = None, ckpt_every: int = 20,
+        mesh=None, fail_at: int | None = None, lr: float = 1e-3,
+        log_every: int = 10, microbatches: int = 1) -> dict:
+    cb.load_all()
+    cfg = cb.get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup=max(steps // 10, 1),
+                                total_steps=steps)
+    dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=seq,
+                               global_batch=batch)
+    jitted, plan, specs, batch_sh = build(cfg, opt_cfg, mesh, batch, seq,
+                                          microbatches)
+    losses = []
+
+    def fresh_state():
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        return adamw.init_state(opt_cfg, params)
+
+    def init_fn():
+        if ckpt_dir:
+            last = ckpt.latest_step(ckpt_dir)
+            if last is not None:
+                shapes = jax.eval_shape(fresh_state)
+                return ckpt.restore(ckpt_dir, last, shapes), last
+        return fresh_state(), 0
+
+    def step_fn(state, step):
+        b = batch_for(cfg, dcfg, step, batch_sh, specs)
+        state, metrics = jitted(state, b)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        return state, metrics
+
+    def save_fn(state, step):
+        if ckpt_dir:
+            ckpt.save(ckpt_dir, step, state)
+
+    failed = {"done": False}
+
+    def fail_hook(step):
+        if fail_at is not None and step == fail_at and not failed["done"]:
+            failed["done"] = True
+            raise fault.TrainingFailure(f"injected failure at step {step}")
+
+    hb = fault.Heartbeat(f"/tmp/heartbeat_{arch}.json") if ckpt_dir else None
+    report = fault.run_supervised(
+        init_fn=init_fn, step_fn=step_fn, save_fn=save_fn,
+        restore_fn=lambda: init_fn(), num_steps=steps,
+        ckpt_every=ckpt_every, heartbeat=hb,
+        straggler=fault.StragglerMonitor(),
+        fail_hook=fail_hook if fail_at is not None else None)
+    report["losses"] = losses
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+    report = run(args.arch, smoke=args.smoke, steps=args.steps,
+                 batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+                 ckpt_every=args.ckpt_every, fail_at=args.fail_at)
+    print(json.dumps({k: v for k, v in report.items() if k != "losses"},
+                     indent=1))
+
+
+if __name__ == "__main__":
+    main()

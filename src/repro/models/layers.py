@@ -1,0 +1,248 @@
+"""Shared model layers: norms, RoPE/M-RoPE, MLPs, flash attention.
+
+Design rules (framework-wide):
+  * all matmuls run in the config dtype (bf16 on TPU), all reductions
+    (softmax, norm statistics) accumulate in f32;
+  * attention never materialises an O(T^2) score tensor: the pure-JAX path
+    is a `lax.scan` over KV blocks carrying (m, l, acc) flash statistics —
+    this is also the compile-memory guarantee behind the 32k dry-run cells;
+  * a sliding `window` reduces the scanned KV range to the causal band.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rmsnorm(d: int):
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and Qwen2-VL's 3D M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., T, H, Dh); positions: broadcastable to (..., T)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., T, Dh/2)
+    ang = ang[..., None, :]                                 # (..., T, 1, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: tuple[int, ...]):
+    """Qwen2-VL multimodal RoPE: positions3 (..., T, 3) = (t, h, w) ids;
+    the head_dim/2 frequency bands are split into `sections` (t|h|w)."""
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)  # (Dh/2,)
+    # pick which of the three position streams drives each frequency band
+    sel = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(jnp.asarray(sel, jnp.int32)[None, None, :],
+                         positions3.shape[:-1] + (dh // 2,)),
+        axis=-1)                                            # (..., T, Dh/2)
+    ang = (pos * freqs)[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    if cfg.mlp in ("swiglu", "gelu_glu"):
+        return {
+            "wi": jax.random.normal(k1, (d, f), dt) * s_in,
+            "wg": jax.random.normal(k2, (d, f), dt) * s_in,
+            "wo": jax.random.normal(k3, (f, d), dt) * s_out,
+        }
+    return {
+        "wi": jax.random.normal(k1, (d, f), dt) * s_in,
+        "wo": jax.random.normal(k2, (f, d), dt) * s_out,
+    }
+
+
+def apply_mlp(p, x, cfg):
+    if cfg.mlp in ("swiglu", "gelu_glu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# flash attention (pure-JAX oracle path; Pallas kernel in repro.kernels)
+# ---------------------------------------------------------------------------
+
+class _FlashCarry(NamedTuple):
+    m: jnp.ndarray    # (B, G, Tq) running max
+    l: jnp.ndarray    # (B, G, Tq) running sum
+    acc: jnp.ndarray  # (B, G, Tq, Dh) running value accum (f32)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block: int = 512, q_offset: int = 0,
+                    kv_len: jnp.ndarray | None = None,
+                    kv_start: jnp.ndarray | None = None):
+    """Memory-bounded multi-head attention.
+
+    q: (B, Tq, H, Dh);  k/v: (B, Tk, K, Dh) with H = K * q_per_kv.
+    Scans KV blocks carrying flash statistics; peak live memory is
+    O(B*H*Tq*(Dh + block)) regardless of Tk.  `q_offset` is the absolute
+    position of q[0] (decode / chunked prefill).  `window`>0 masks keys
+    older than `window` positions.  `kv_len` (B,) masks invalid cache tail.
+    """
+    b, tq, h, dh = q.shape
+    _, tk, kh, _ = k.shape
+    g = h // kh  # query heads per kv head
+    scale = dh ** -0.5
+
+    qr = (q * scale).reshape(b, tq, kh, g, dh).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(tq)
+
+    nblk = -(-tk // block)
+    pad = nblk * block - tk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(b, nblk, block, kh, dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nblk, block, kh, dh).transpose(1, 0, 2, 3, 4)
+
+    init = _FlashCarry(
+        m=jnp.full((b, tq, kh, g), NEG_INF, jnp.float32),
+        l=jnp.zeros((b, tq, kh, g), jnp.float32),
+        acc=jnp.zeros((b, tq, kh, g, dh), jnp.float32),
+    )
+
+    def step(carry, inp):
+        blk_idx, kblk, vblk = inp
+        kpos = blk_idx * block + jnp.arange(block)
+        # scores: (B, Tq, K, G, block)
+        s = jnp.einsum("btkgd,bskd->btkgs", qr, kblk.astype(jnp.float32))
+        mask = jnp.ones((tq, block), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        mask &= (kpos < tk)[None, :]
+        mask = mask[None]
+        if kv_len is not None:
+            mask = mask & (kpos[None, None, :] < kv_len[:, None, None])
+        if kv_start is not None:
+            mask = mask & (kpos[None, None, :] >= kv_start[:, None, None])
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(carry.m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(carry.m - m_new)
+        l_new = carry.l * corr + p.sum(-1)
+        acc_new = carry.acc * corr[..., None] + jnp.einsum(
+            "btkgs,bskd->btkgd", p, vblk.astype(jnp.float32))
+        return _FlashCarry(m_new, l_new, acc_new), None
+
+    # checkpoint: the scan backward recomputes per-block scores instead of
+    # storing the O(Tq x block) probability tensors for every block
+    step_ckpt = jax.checkpoint(
+        step, policy=jax.checkpoint_policies.nothing_saveable)
+    carry, _ = jax.lax.scan(step_ckpt, init, (jnp.arange(nblk), kb, vb))
+    out = carry.acc / jnp.maximum(carry.l[..., None], 1e-30)
+    return out.reshape(b, tq, h, dh).astype(q.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
+                  kv_len=None):
+    """Naive O(T^2) oracle (tests only)."""
+    b, tq, h, dh = q.shape
+    _, tk, kh, _ = k.shape
+    g = h // kh
+    qr = q.reshape(b, tq, kh, g, dh).astype(jnp.float32) * dh ** -0.5
+    s = jnp.einsum("btkgd,bskd->btkgs", qr, k.astype(jnp.float32))
+    qpos = q_offset + jnp.arange(tq)
+    kpos = jnp.arange(tk)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    mask = mask[None]
+    if kv_len is not None:
+        mask = mask & (kpos[None, None, :] < kv_len[:, None, None])
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, tq, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block parameters
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    d, h, kh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * dh), dt) * d ** -0.5,
+        "wk": jax.random.normal(ks[1], (d, kh * dh), dt) * d ** -0.5,
+        "wv": jax.random.normal(ks[2], (d, kh * dh), dt) * d ** -0.5,
+        "wo": jax.random.normal(ks[3], (h * dh, d), dt) * (h * dh) ** -0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dt)
+        p["bk"] = jnp.zeros((kh * dh,), dt)
+        p["bv"] = jnp.zeros((kh * dh,), dt)
+    return p
+
+
+def qkv(p, x, cfg, positions):
+    """Project + position-encode. positions: (B,T) ids or (B,T,3) for mrope."""
+    b, t, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v

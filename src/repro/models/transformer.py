@@ -1,0 +1,444 @@
+"""Decoder-LM assembly for all 10 assigned architectures.
+
+An architecture compiles to *segments*: a tuple of block types repeated N
+times, with parameters stacked over the repeat axis and executed under
+`lax.scan` (small HLO, bounded compile time even at 80 layers) with
+per-layer rematerialisation.
+
+    dense/vlm/audio:  [(("attn",), L)]
+    llama4 (moe/2):   [(("attn", "moe"), L/2)]
+    arctic (moe+res): [(("moe",), L)]
+    rwkv6:            [(("rwkv",), L)]
+    recurrentgemma:   [(("rec","rec","lattn"), 12), (("rec","rec"), 1)]
+
+Three execution modes share the block code:
+    train   — full sequence, no cache;
+    prefill — full sequence, emits per-layer cache (stacked by scan);
+    decode  — one token, consumes + re-emits cache (scan xs/ys).
+
+Sharding is injected via a duck-typed `shd` context (repro.sharding): the
+model only *tags* tensors (`shd.act(x, kind)`); the partition plan decides
+layouts.  `shd=None` (CPU tests) is a no-op.  MoE and sharded decode
+attention additionally use `shd.mesh` for their `shard_map` sections.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kvcache, layers, moe, rglru, rwkv6
+
+
+# ---------------------------------------------------------------------------
+# segment plan
+# ---------------------------------------------------------------------------
+
+def segments(cfg) -> list[tuple[tuple[str, ...], int]]:
+    L = cfg.num_layers
+    if cfg.ssm == "rwkv6":
+        return [(("rwkv",), L)]
+    if cfg.pattern:
+        plen = len(cfg.pattern)
+        body = tuple("lattn" if t == "attn" else t for t in cfg.pattern)
+        segs = [(body, L // plen)]
+        tail = L % plen
+        if tail:
+            segs.append((body[:tail], 1))
+        return segs
+    if cfg.is_moe:
+        if cfg.moe_every == 1:
+            return [(("moe",), L)]
+        pat = tuple("attn" if i < cfg.moe_every - 1 else "moe"
+                    for i in range(cfg.moe_every))
+        return [(pat, L // cfg.moe_every)]
+    return [(("attn",), L)]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(btype: str, key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"ln1": layers.init_rmsnorm(d), "ln2": layers.init_rmsnorm(d)}
+    if btype in ("attn", "lattn"):
+        p["attn"] = layers.init_attention(ks[0], cfg)
+        p["mlp"] = layers.init_mlp(ks[1], cfg)
+    elif btype == "moe":
+        p["attn"] = layers.init_attention(ks[0], cfg)
+        p["moe"] = moe.init_moe(ks[1], cfg)
+        if cfg.dense_ff_residual:
+            p["dense"] = layers.init_mlp(ks[2], cfg, cfg.dense_ff_residual)
+    elif btype == "rwkv":
+        p.update(rwkv6.init_rwkv_block(ks[0], cfg))
+    elif btype == "rec":
+        p["rec"] = rglru.init_rec_block(ks[0], cfg)
+        p["mlp"] = layers.init_mlp(ks[1], cfg)
+    else:
+        raise ValueError(btype)
+    return p
+
+
+def init_params(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, len(segments(cfg)) + 2)
+    params: dict[str, Any] = {}
+    if cfg.embed_inputs:
+        params["embed"] = jax.random.normal(
+            keys[0], (cfg.vocab, cfg.d_model), dt) * cfg.d_model ** -0.5
+    segs = []
+    for i, (types, n) in enumerate(segments(cfg)):
+        seg_keys = jax.random.split(keys[i + 1], n)
+
+        def init_one(k, types=types):
+            sub = jax.random.split(k, len(types))
+            return [_init_block(t, sk, cfg) for t, sk in zip(types, sub)]
+
+        segs.append(jax.vmap(init_one)(seg_keys))
+    params["segments"] = segs
+    params["final_norm"] = layers.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.vocab), dt) * cfg.d_model ** -0.5
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def _init_block_cache(btype, cfg, batch, length):
+    if btype in ("attn", "moe"):
+        return kvcache.init_full_cache(cfg, batch, length)
+    if btype == "lattn":
+        return kvcache.init_window_cache(cfg, batch)
+    if btype == "rwkv":
+        return rwkv6.init_rwkv_state(cfg, batch)
+    if btype == "rec":
+        return rglru.init_rec_state(cfg, batch)
+    raise ValueError(btype)
+
+
+def init_cache(cfg, batch: int, length: int):
+    """Decode cache for a max context of `length` tokens."""
+    out = []
+    for types, n in segments(cfg):
+        def one(_, types=types):
+            return [_init_block_cache(t, cfg, batch, length) for t in types]
+        out.append(jax.vmap(one)(jnp.arange(n)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+class Ctx(NamedTuple):
+    cfg: Any
+    mode: str                    # train | prefill | decode
+    positions: Any               # (B,T) ids, (B,T,3) mrope, or (B,) decode
+    shd: Any = None              # sharding context or None
+    router_bias: Any = None      # (E,) slot-hit routing bias (serving)
+
+    @property
+    def mesh(self):
+        return getattr(self.shd, "mesh", None)
+
+    @property
+    def data_axes(self):
+        return getattr(self.shd, "data_axes", ("data",))
+
+    def act(self, x, kind):
+        return self.shd.act(x, kind) if self.shd is not None else x
+
+
+def _attention(p, x, cache, ctx, window: int):
+    cfg = ctx.cfg
+    b, t, _ = x.shape
+    h = layers.rmsnorm(x, p["ln1"])
+    h = ctx.act(h, "attn_in")
+    pos = ctx.positions
+    if ctx.mode == "decode":
+        rope_pos = pos[:, None] if cfg.pos == "rope" else \
+            jnp.broadcast_to(pos[:, None, None], (b, 1, 3))
+    else:
+        rope_pos = pos
+    q, k, v = layers.qkv(p["attn"], h, cfg, rope_pos)
+    q = ctx.act(q, "q_heads")
+    if ctx.mode == "decode":
+        if window:
+            o, new_cache = kvcache.window_decode_attention(
+                q, cache, k, v, pos, cfg)
+        else:
+            o, new_cache = kvcache.decode_attention(
+                q, cache, k, v, pos, cfg, ctx.mesh, ctx.data_axes)
+    else:
+        k = ctx.act(k, "kv_heads")
+        v = ctx.act(v, "kv_heads")
+        kq, vq = k, v
+        if (ctx.shd is not None and ctx.shd.strategy == "heads"
+                and cfg.q_per_kv > 1):
+            # GQA under head-TP: the (H -> kh, g) reshape inside flash
+            # attention cannot stay sharded when kh < tp, so expand K/V to
+            # one head per query head *before* the kernel; the expanded
+            # tensors shard over H exactly like Q (per-device bytes equal
+            # replicated KV, so this costs no HBM).
+            kq = ctx.act(_expand_kv(k, cfg.q_per_kv), "q_heads")
+            vq = ctx.act(_expand_kv(v, cfg.q_per_kv), "q_heads")
+        if window:
+            o = _local_attention(q, kq, vq, window)
+        else:
+            o = layers.flash_attention(q, kq, vq, causal=True)
+        new_cache = None
+        if ctx.mode == "prefill":
+            new_cache = _prefill_cache(cfg, k, v, window)
+    o = o.reshape(b, t, -1)
+    o = ctx.act(o, "attn_out")
+    return ctx.act(o @ p["attn"]["wo"], "hidden"), new_cache
+
+
+def _expand_kv(k, g):
+    b, t, kh, dh = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, kh, g, dh))
+    return k.reshape(b, t, kh * g, dh)
+
+
+def _local_attention(q, k, v, window):
+    """Exact sliding-window attention via the two-chunk trick."""
+    b, t, h, dh = q.shape
+    if t <= window:
+        return layers.flash_attention(q, k, v, causal=True, window=window,
+                                      block=min(t, 1024))
+    assert t % window == 0, (t, window)
+    nc = t // window
+    kh = k.shape[2]
+    qc = q.reshape(b, nc, window, h, dh)
+    kc = k.reshape(b, nc, window, kh, dh)
+    vc = v.reshape(b, nc, window, kh, dh)
+    # prepend each chunk's predecessor (zeros for the first)
+    kprev = jnp.pad(kc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    vprev = jnp.pad(vc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    k2 = jnp.concatenate([kprev, kc], axis=2).reshape(
+        b * nc, 2 * window, kh, dh)
+    v2 = jnp.concatenate([vprev, vc], axis=2).reshape(
+        b * nc, 2 * window, kh, dh)
+    q2 = qc.reshape(b * nc, window, h, dh)
+    # chunk 0 has a zero-padded predecessor: mask its leading window
+    kv_start = jnp.where(
+        (jnp.arange(b * nc) % nc) == 0, window, 0).astype(jnp.int32)
+    o = layers.flash_attention(q2, k2, v2, causal=True, window=window,
+                               q_offset=window, kv_start=kv_start,
+                               block=min(2 * window, 1024))
+    return o.reshape(b, t, h, dh)
+
+
+def _prefill_cache(cfg, k, v, window):
+    """Arrange prefill K/V as a decode-ready cache."""
+    if not window:
+        return {"k": k, "v": v}
+    b, t, kh, dh = k.shape
+    w = cfg.window
+    if t >= w:
+        # last `window` tokens at their circular slots
+        tail_k, tail_v = k[:, t - w:], v[:, t - w:]
+        slots = (jnp.arange(t - w, t) % w)
+        order = jnp.argsort(slots)
+        return {"k": tail_k[:, order], "v": tail_v[:, order]}
+    pad = w - t
+    return {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+
+
+def _mlp_sub(p, x, ctx, name="mlp"):
+    cfg = ctx.cfg
+    h = layers.rmsnorm(x, p["ln2"])
+    h = ctx.act(h, "mlp_in")
+    out = layers.apply_mlp(p[name], h, cfg) if name == "mlp" else None
+    return ctx.act(out, "hidden")
+
+
+def apply_block(btype, p, x, cache, ctx):
+    cfg = ctx.cfg
+    aux = {}
+    if btype in ("attn", "lattn"):
+        window = cfg.window if btype == "lattn" else 0
+        o, new_cache = _attention(p, x, cache, ctx, window)
+        x = x + o
+        h = layers.rmsnorm(x, p["ln2"])
+        h = ctx.act(h, "mlp_in")
+        x = x + ctx.act(layers.apply_mlp(p["mlp"], h, cfg), "hidden")
+    elif btype == "moe":
+        o, new_cache = _attention(p, x, cache, ctx, 0)
+        x = x + o
+        h = layers.rmsnorm(x, p["ln2"])
+        h = ctx.act(h, "mlp_in")
+        mo, aux = moe.moe_apply(p["moe"], h, cfg, ctx.mesh, ctx.data_axes,
+                                router_bias=ctx.router_bias)
+        if cfg.dense_ff_residual:
+            mo = mo + layers.apply_mlp(p["dense"], h, cfg)
+        x = x + ctx.act(mo, "hidden")
+    elif btype == "rwkv":
+        st = cache if cache is not None else rwkv6.init_rwkv_state(
+            cfg, x.shape[0])
+        h = layers.rmsnorm(x, p["ln1"])
+        o, x_last_tm, s_new = rwkv6.time_mix(
+            p, h, st["shift_tm"].astype(x.dtype), st["s"], cfg,
+            use_chunked=(ctx.mode != "decode"))
+        x = x + ctx.act(o, "hidden")
+        h2 = layers.rmsnorm(x, p["ln2"])
+        o2, x_last_cm = rwkv6.channel_mix(
+            p, h2, st["shift_cm"].astype(x.dtype))
+        x = x + ctx.act(o2, "hidden")
+        new_cache = {"s": s_new,
+                     "shift_tm": x_last_tm.astype(jnp.float32),
+                     "shift_cm": x_last_cm.astype(jnp.float32)}
+    elif btype == "rec":
+        st = cache if cache is not None else rglru.init_rec_state(
+            cfg, x.shape[0])
+        h = layers.rmsnorm(x, p["ln1"])
+        o, new_cache = rglru.rec_block(p["rec"], h, st, cfg)
+        x = x + ctx.act(o, "hidden")
+        h2 = layers.rmsnorm(x, p["ln2"])
+        x = x + ctx.act(layers.apply_mlp(p["mlp"], h2, cfg), "hidden")
+    else:
+        raise ValueError(btype)
+    if ctx.mode == "train":
+        new_cache = 0  # uniform scan ys placeholder
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# segment scan
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if cfg.remat == "full"
+              else jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def run_segments(params, x, caches, ctx):
+    """caches: None (train/prefill) or list matching segments."""
+    cfg = ctx.cfg
+    all_caches, all_aux = [], []
+    for si, (types, n) in enumerate(segments(cfg)):
+        seg_params = params["segments"][si]
+        seg_cache = caches[si] if caches is not None else None
+
+        def body(xc, xs, types=types):
+            p_list = xs[0]
+            c_list = xs[1] if len(xs) > 1 else [None] * len(types)
+            ncs, auxes = [], []
+            for j, bt in enumerate(types):
+                xc, nc, aux = apply_block(bt, p_list[j], xc, c_list[j], ctx)
+                ncs.append(nc)
+                auxes.append(aux)
+            return xc, (ncs, auxes)
+
+        body = _remat(body, cfg)
+        xs = (seg_params,) if seg_cache is None else (seg_params, seg_cache)
+        x, (ncs, auxes) = jax.lax.scan(lambda c, s: body(c, s), x, xs)
+        all_caches.append(ncs)
+        all_aux.append(auxes)
+    return x, all_caches, all_aux
+
+
+# ---------------------------------------------------------------------------
+# top level: forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _embed_in(cfg, params, batch, ctx):
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    return ctx.act(x, "hidden")
+
+
+def _positions_for(cfg, batch, t):
+    if cfg.pos == "mrope":
+        return batch["positions"]
+    b = (batch["tokens"] if "tokens" in batch else batch["embeds"]).shape[0]
+    return jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+
+
+def _logits(cfg, params, x, ctx):
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    return ctx.act(x @ head, "logits")
+
+
+def forward(cfg, params, batch, shd=None, mode="train"):
+    t = (batch["tokens"] if "tokens" in batch else batch["embeds"]).shape[1]
+    ctx = Ctx(cfg=cfg, mode=mode, positions=_positions_for(cfg, batch, t),
+              shd=shd)
+    x = _embed_in(cfg, params, batch, ctx)
+    x, caches, aux = run_segments(params, x, None, ctx)
+    x = layers.rmsnorm(x, params["final_norm"])
+    return x, caches, aux, ctx
+
+
+def loss_fn(cfg, params, batch, shd=None):
+    """Next-token cross entropy (mean over tokens); returns (loss, aux)."""
+    x, _, aux, ctx = forward(cfg, params, batch, shd)
+    tgt = batch["tokens"] if cfg.embed_inputs else batch["labels"]
+    # shift by padding (keeps T divisible for the chunked scan); the final
+    # position gets weight 0
+    targets = jnp.pad(tgt[:, 1:], ((0, 0), (0, 1)))
+    weights = jnp.ones(targets.shape, jnp.float32).at[:, -1].set(0.0)
+
+    def xent(xc, tc, wc):
+        logits = _logits(cfg, params, xc, ctx).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return ((logz - gold) * wc).sum()
+
+    n_tok = targets.shape[0] * (targets.shape[1] - 1)
+    if cfg.loss_chunk and x.shape[1] % cfg.loss_chunk == 0:
+        nc = x.shape[1] // cfg.loss_chunk
+        xc = x.reshape(x.shape[0], nc, cfg.loss_chunk, -1).transpose(
+            1, 0, 2, 3)
+        tc = targets.reshape(targets.shape[0], nc, -1).transpose(1, 0, 2)
+        wc = weights.reshape(weights.shape[0], nc, -1).transpose(1, 0, 2)
+        # checkpoint: the scan's backward must NOT store per-chunk f32
+        # logits (that would be the full (B,T,V) we are chunking to avoid)
+        chunk_loss = jax.checkpoint(
+            lambda a, b, c: xent(a, b, c),
+            policy=jax.checkpoint_policies.nothing_saveable)
+        total = jax.lax.scan(
+            lambda acc, abw: (acc + chunk_loss(*abw), None), jnp.float32(0),
+            (xc, tc, wc))[0]
+    else:
+        total = xent(x, targets, weights)
+    loss = total / n_tok
+    lb = [a.get("lb_loss") for seg in aux for a in seg
+          if isinstance(a, dict) and a.get("lb_loss") is not None]
+    if lb:
+        loss = loss + 0.01 * sum(jnp.mean(l) for l in lb)
+    return loss, aux
+
+
+def prefill(cfg, params, batch, shd=None):
+    """Returns (last-token logits, decode-ready cache, aux)."""
+    x, caches, aux, ctx = forward(cfg, params, batch, shd, mode="prefill")
+    x = x[:, -1:]
+    return _logits(cfg, params, x, ctx), caches, aux
+
+
+def decode_step(cfg, params, batch, cache, shd=None):
+    """One token for every sequence.  batch: tokens/embeds (B,1,...) +
+    positions (B,).  Returns (logits (B,1,V), new cache, aux)."""
+    ctx = Ctx(cfg=cfg, mode="decode", positions=batch["positions"], shd=shd,
+              router_bias=batch.get("router_bias"))
+    x = _embed_in(cfg, params, batch, ctx)
+    x, caches, aux = run_segments(params, x, cache, ctx)
+    x = layers.rmsnorm(x, params["final_norm"])
+    return _logits(cfg, params, x, ctx), caches, aux

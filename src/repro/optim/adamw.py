@@ -1,0 +1,151 @@
+"""AdamW with dtype-configurable state (distributed-optimization trick).
+
+For >=100B models the optimizer footprint dominates: full fp32 Adam is
+16 bytes/param (master+m+v+grad).  We keep a knob: m/v in bf16 and an
+optional fp32 master copy.  With ZeRO sharding (states sharded over `data`)
+arctic-480b training fits the single-pod 4 TB HBM budget (EXPERIMENTS.md
+§Dry-run).  Global-norm clipping included; weight decay skips norms/biases.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"    # "bfloat16" for >=100B models
+    master_fp32: bool = True        # keep fp32 master when params are bf16
+    factored_v: bool = False        # Adafactor-style row/col second moment
+                                    # for >=2D leaves (>=300B models): cuts
+                                    # v from O(params) to O(rows+cols)
+    warmup: int = 100
+    schedule: str = "cosine"        # cosine | constant
+    total_steps: int = 10_000
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    m: Any
+    v: Any
+    master: Any          # fp32 master copy or None
+
+
+def _lr_at(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((step - cfg.warmup) /
+                        max(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+        base = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    else:
+        base = 1.0
+    return cfg.lr * warm * base
+
+
+def _v_init(cfg, p):
+    if cfg.factored_v and p.ndim >= 2:
+        return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+    return jnp.zeros(p.shape, jnp.dtype(cfg.state_dtype))
+
+
+def init_state(cfg: AdamWConfig, params) -> TrainState:
+    sd = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, sd)
+    needs_master = cfg.master_fp32 and any(
+        l.dtype == jnp.bfloat16 for l in jax.tree_util.tree_leaves(params))
+    master = (jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.float32), params) if needs_master else None)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(lambda p: _v_init(cfg, p), params),
+        master=master,
+    )
+
+
+def _decay_mask(params):
+    def mask(path, leaf):
+        name = jax.tree_util.keystr(path)
+        return leaf.ndim >= 2 and not any(
+            t in name for t in ("ln1", "ln2", "final_norm", "mu", "w0",
+                                "lam", "b_r", "b_i", "ln_o"))
+    return jax.tree_util.tree_map_with_path(mask, params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)))
+        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(cfg: AdamWConfig, state: TrainState, grads) -> tuple[
+        TrainState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = _lr_at(cfg, step)
+    sd = jnp.dtype(cfg.state_dtype)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    wd_mask = _decay_mask(state.params)
+
+    ref = state.master if state.master is not None else state.params
+
+    def upd(g, m, v, p_ref, decay):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        mhat = m32 / b1c
+        if isinstance(v, dict):  # factored second moment
+            g2 = g * g + 1e-30
+            r = cfg.b2 * v["r"] + (1 - cfg.b2) * g2.mean(axis=-1)
+            c = cfg.b2 * v["c"] + (1 - cfg.b2) * g2.mean(axis=-2)
+            rhat, chat = r / b2c, c / b2c
+            denom = rhat.mean(axis=-1, keepdims=True)
+            vhat = (rhat[..., None] * chat[..., None, :]
+                    / jnp.maximum(denom[..., None], 1e-30))
+            v_new = {"r": r, "c": c}
+        else:
+            v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+            vhat = v32 / b2c
+            v_new = v32.astype(sd)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p_ref.astype(jnp.float32)
+        if decay:
+            delta = delta + cfg.weight_decay * p32
+        p_new = p32 - lr * delta
+        return p_new, m32.astype(sd), v_new
+
+    flat_ref, treedef = jax.tree_util.tree_flatten(ref)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)   # dicts stay unflattened leaves
+    flat_mask = treedef.flatten_up_to(_decay_mask(ref))
+    new_p32, new_m, new_v = [], [], []
+    for g, m, v, p, dm in zip(flat_g, flat_m, flat_v, flat_ref, flat_mask):
+        pn, mn, vn = upd(g, m, v, p, dm)
+        new_p32.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    p32_tree = jax.tree_util.tree_unflatten(treedef, new_p32)
+    params_dtypes = jax.tree_util.tree_leaves(state.params)
+    new_params = jax.tree_util.tree_unflatten(treedef, [
+        p.astype(old.dtype) for p, old in zip(new_p32, params_dtypes)])
+    new_master = p32_tree if state.master is not None else None
+    new_state = TrainState(
+        step=step, params=new_params,
+        m=jax.tree_util.tree_unflatten(treedef, new_m),
+        v=jax.tree_util.tree_unflatten(treedef, new_v),
+        master=new_master)
+    return new_state, {"grad_norm": gnorm, "lr": lr}

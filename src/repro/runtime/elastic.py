@@ -1,0 +1,41 @@
+"""Elastic re-meshing: continue training after permanent device loss.
+
+Strategy (DESIGN.md §5): the `model` axis is sacred (layer math depends on
+it); capacity loss shrinks the `data` axis to the largest power-of-two that
+still divides the global batch, and the checkpoint re-shards onto the new
+mesh through the host (repro.checkpoint restore takes new shardings).
+The deterministic data pipeline is keyed by step, so training resumes on
+exactly the batch schedule the lost configuration would have run.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.optim import adamw
+from repro.sharding.partition import ShardingPlan
+from repro.train import step as train_step
+from repro.checkpoint import ckpt
+
+
+def shrink_mesh(devices_available: int, model: int = 16,
+                axis_names=("data", "model")):
+    """Largest (data, model) mesh that fits the surviving devices."""
+    data = max(1, devices_available // model)
+    # largest power of two <= data (keeps global batch divisible)
+    while data & (data - 1):
+        data &= data - 1
+    n = data * model
+    devs = jax.devices()[:n]
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devs).reshape(data, model), axis_names)
+
+
+def reshard_state(directory: str, step: int, cfg, opt_cfg, new_mesh):
+    """Load a checkpoint onto a (possibly smaller) mesh."""
+    plan = ShardingPlan(new_mesh, cfg, mode="train")
+    shapes = train_step.abstract_state(cfg, opt_cfg)
+    shardings = train_step.state_shardings(cfg, plan, shapes)
+    with new_mesh:
+        state = ckpt.restore(directory, step, shapes, shardings)
+    return state, plan

@@ -1,0 +1,209 @@
+"""Slot-aware multi-tenant serving engine — the paper's §VI-C at the
+serving level.
+
+Mapping (DESIGN.md §2): tenants are processes; each tenant's routing
+distribution is its instruction mix; per-device expert slots are the
+reconfigurable regions; the round-robin token quantum is FreeRTOS's timer
+quantum.  Per decode step the engine:
+
+  1. picks the active tenant (round-robin, `quantum_tokens` per turn);
+  2. runs the jitted decode step on that tenant's batch/cache;
+  3. feeds the per-layer expert-load vectors into each model-shard's
+     block-LRU disambiguator (repro.core.expert_slots) — misses are slot
+     fills costed at bytes/bandwidth;
+  4. optionally computes a *slot-hit routing* bias from the resident sets
+     (the beyond-paper knob): +hit_bias on resident experts' logits.
+
+The report gives per-tenant tokens, hit rates, modelled fill seconds and
+modelled step seconds — the quantities behind benchmarks/bench_expert_slots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import expert_slots as es
+from repro.models import transformer
+
+
+@dataclass
+class Tenant:
+    name: str
+    tokens: np.ndarray            # (B, T) prompt/stream tokens
+    # the tenant's "extension working set": a fixed router bias favouring
+    # its preferred experts (the process binary carrying its own
+    # instruction extensions, paper §IV)
+    router_bias: np.ndarray | None = None
+    position: int = 0
+    done_tokens: int = 0
+    cache: object = None
+
+
+@dataclass
+class EngineConfig:
+    quantum_tokens: int = 32      # tokens per tenant turn (OS quantum)
+    slots_per_shard: int = 4      # resident experts per model shard
+    expert_shards: int = 1        # model-axis shards holding experts
+    hit_bias: float = 0.0         # 0 = paper-faithful LRU (no reroute)
+    fill_bandwidth: float = 50e9  # bytes/s for slot fills (PCIe-class)
+    compute_s_per_token: float = 1e-3  # modelled decode compute time
+
+
+class SlotServeEngine:
+    def __init__(self, cfg, params, engine_cfg: EngineConfig,
+                 tenants: list[Tenant], max_len: int = 128, shd=None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = engine_cfg
+        self.tenants = tenants
+        self.shd = shd
+        self.max_len = max_len
+        mlp_mats = 3 if cfg.mlp in ("swiglu", "gelu_glu") else 2
+        expert_bytes = mlp_mats * cfg.d_model * cfg.d_ff * 2
+        e_per_shard = max(cfg.num_experts // engine_cfg.expert_shards, 1)
+        self.slot_cfg = es.ExpertSlotConfig(
+            num_experts=e_per_shard,
+            slots_per_device=engine_cfg.slots_per_shard,
+            expert_bytes=expert_bytes,
+            fill_bandwidth=engine_cfg.fill_bandwidth,
+            hit_bias=engine_cfg.hit_bias)
+        self.shard_states = [es.init_state(self.slot_cfg)
+                             for _ in range(engine_cfg.expert_shards)]
+        self.stats = {"fills": 0, "accesses": 0, "fill_seconds": 0.0,
+                      "steps": 0, "per_tenant": {t.name: 0 for t in tenants}}
+        for t in tenants:
+            t.cache = transformer.init_cache(cfg, t.tokens.shape[0], max_len)
+        self._decode = jax.jit(
+            lambda params, cache, batch: transformer.decode_step(
+                self.cfg, params, batch, cache, shd=self.shd),
+            donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def _router_bias(self, tenant: Tenant):
+        if not self.cfg.is_moe:
+            return None
+        bias = np.zeros((self.cfg.num_experts,), np.float32)
+        if tenant.router_bias is not None:
+            bias += tenant.router_bias
+        if self.ecfg.hit_bias != 0.0:
+            e_per = self.slot_cfg.num_experts
+            for s, st in enumerate(self.shard_states):
+                res = np.asarray(st.resident)
+                bias[s * e_per:(s + 1) * e_per] += res * self.ecfg.hit_bias
+        if not bias.any():
+            return None
+        return jnp.asarray(bias)
+
+    def _account(self, loads):
+        """Feed per-layer global expert loads into the shard slot pools.
+        Each aux entry is stacked (num_layers_in_segment, E) by the layer
+        scan — account layer by layer (each MoE layer's slot pool is the
+        same physical pool here; finer per-layer pools are a knob)."""
+        e_per = self.slot_cfg.num_experts
+        for stacked in loads:
+            stacked = np.atleast_2d(np.asarray(stacked))
+            for load in stacked:
+                for s in range(self.ecfg.expert_shards):
+                    shard_load = load[s * e_per:(s + 1) * e_per]
+                    ids = np.nonzero(shard_load)[0]
+                    if len(ids) == 0:
+                        continue
+                    st, stats = es.access_block(
+                        self.shard_states[s], jnp.asarray(ids, jnp.int32),
+                        self.slot_cfg)
+                    self.shard_states[s] = st
+                    self.stats["fills"] += int(stats.misses)
+                    self.stats["accesses"] += int(stats.accessed)
+                    self.stats["fill_seconds"] += float(stats.fill_seconds)
+
+    def _decode_once(self, tenant: Tenant):
+        b = tenant.tokens.shape[0]
+        pos = min(tenant.position, self.max_len - 1)
+        batch = {
+            "positions": jnp.full((b,), pos, jnp.int32),
+        }
+        if self.cfg.embed_inputs:
+            batch["tokens"] = jnp.asarray(
+                tenant.tokens[:, pos % tenant.tokens.shape[1]][:, None])
+        else:
+            batch["embeds"] = jnp.zeros((b, 1, self.cfg.d_model),
+                                        jnp.dtype(self.cfg.dtype))
+        rb = self._router_bias(tenant)
+        if rb is not None:
+            batch["router_bias"] = rb
+        logits, cache, aux = self._decode(self.params, tenant.cache, batch)
+        tenant.cache = cache
+        tenant.position += 1
+        tenant.done_tokens += b
+        loads = [a["expert_load"] for seg in aux for a in seg
+                 if isinstance(a, dict) and "expert_load" in a]
+        self._account(loads)
+
+    # ------------------------------------------------------------------
+    def run(self, total_steps: int) -> dict:
+        ti = 0
+        quantum_left = self.ecfg.quantum_tokens
+        for _ in range(total_steps):
+            tenant = self.tenants[ti]
+            self._decode_once(tenant)
+            self.stats["steps"] += 1
+            self.stats["per_tenant"][tenant.name] += 1
+            quantum_left -= tenant.tokens.shape[0]
+            if quantum_left <= 0:
+                ti = (ti + 1) % len(self.tenants)
+                quantum_left = self.ecfg.quantum_tokens
+        s = self.stats
+        hit_rate = (1.0 - s["fills"] / s["accesses"]
+                    if s["accesses"] else 1.0)
+        compute_s = s["steps"] * self.ecfg.compute_s_per_token
+        return {
+            **s,
+            "hit_rate": hit_rate,
+            "modelled_compute_s": compute_s,
+            "overhead_frac": s["fill_seconds"] /
+            max(compute_s + s["fill_seconds"], 1e-12),
+        }
+
+
+def model_batcher(cfg, params, batch_size: int, max_len: int, shd=None):
+    """A ContinuousBatcher wired to the real model: per-row prompt prefill
+    writes the (1, T) prefill cache into the shared fixed-width decode
+    cache; the decode callback is the jitted single-token step."""
+    import jax.numpy as jnp
+
+    from repro.serve.batching import ContinuousBatcher
+
+    cache = transformer.init_cache(cfg, batch_size, max_len)
+    decode_fn = jax.jit(
+        lambda p, c, b: transformer.decode_step(cfg, p, b, c, shd=shd))
+
+    def prefill_row(row, tokens):
+        nonlocal cache
+        t0 = len(tokens)
+        _, row_cache, _ = transformer.prefill(
+            cfg, params, {"tokens": jnp.asarray(tokens)[None, :]}, shd=shd)
+
+        def write(dst, src):
+            # dst: (n, B, S, ...) shared cache; src: (n, 1, t0, ...) row
+            if dst.ndim >= 3 and src.shape[2] == t0 and \
+                    dst.shape[2] >= t0 and dst.shape[1] == batch_size:
+                return dst.at[:, row, :t0].set(src[:, 0].astype(dst.dtype))
+            if dst.ndim >= 2 and dst.shape[1] == batch_size:
+                return dst.at[:, row].set(src[:, 0].astype(dst.dtype))
+            return dst
+
+        cache = jax.tree_util.tree_map(write, cache, row_cache)
+
+    def decode(tokens, positions):
+        nonlocal cache
+        logits, cache, _ = decode_fn(
+            params, cache,
+            {"tokens": jnp.asarray(tokens),
+             "positions": jnp.asarray(positions)})
+        return np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+
+    return ContinuousBatcher(batch_size, max_len, prefill_row=prefill_row,
+                             decode=decode)

@@ -1,0 +1,81 @@
+"""Serving step builders: prefill and single-token decode, fully sharded.
+
+`serve_step` (decode) is what the `decode_32k` / `long_500k` dry-run cells
+lower: one new token per sequence against a max-context cache.  The cache
+is sharded (batch -> data, seq -> model) and flash-decode combines shard
+partials via psum (repro.models.kvcache).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models import transformer
+from repro.sharding.partition import ShardingPlan
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_cache(cfg, batch: int, length: int):
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, length))
+
+
+def make_prefill(cfg, plan: ShardingPlan):
+    def prefill_step(params, batch):
+        logits, cache, aux = transformer.prefill(cfg, params, batch,
+                                                 shd=plan)
+        loads = [a["expert_load"] for seg in aux for a in seg
+                 if isinstance(a, dict) and "expert_load" in a]
+        return logits, cache, loads
+    return prefill_step
+
+
+def make_decode(cfg, plan: ShardingPlan):
+    def decode(params, cache, batch):
+        logits, cache, aux = transformer.decode_step(cfg, params, batch,
+                                                     cache, shd=plan)
+        loads = [a["expert_load"] for seg in aux for a in seg
+                 if isinstance(a, dict) and "expert_load" in a]
+        return logits, cache, loads
+    return decode
+
+
+def jit_decode_step(cfg, plan: ShardingPlan, batch_specs, batch: int,
+                    length: int):
+    params_shapes = abstract_params(cfg)
+    params_sh = plan.param_shardings(params_shapes)
+    cache_shapes = abstract_cache(cfg, batch, length)
+    cache_sh = plan.cache_shardings(cache_shapes)
+    batch_sh = plan.input_shardings(batch_specs)
+    jitted = jax.jit(
+        make_decode(cfg, plan),
+        in_shardings=(params_sh, cache_sh, batch_sh),
+        out_shardings=(None, cache_sh, None),
+        donate_argnums=(1,),
+    )
+    return jitted, params_shapes, cache_shapes
+
+
+def jit_prefill_step(cfg, plan: ShardingPlan, batch_specs):
+    params_shapes = abstract_params(cfg)
+    params_sh = plan.param_shardings(params_shapes)
+    batch_sh = plan.input_shardings(batch_specs)
+    fn = make_prefill(cfg, plan)
+    # the emitted cache leaves prefill in the DECODE layout (batch->data,
+    # seq->model): without this the per-device KV output alone busts the
+    # HBM budget for the 32k MoE/large-vocab cells
+    out_shapes = jax.eval_shape(fn, params_shapes, batch_specs)
+    cache_sh = plan.cache_shardings(out_shapes[1])
+    jitted = jax.jit(
+        fn,
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=(None, cache_sh, None),
+    )
+    return jitted, params_shapes
+
+
+def _num_moe_layers(cfg) -> int:
+    return sum(cfg.moe_layer_mask()) if cfg.is_moe else 0

@@ -1,0 +1,185 @@
+"""Pallas kernels vs pure-jnp oracles — interpret mode, shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,tq,tk,h,kh,dh,dtype", [
+    (1, 128, 128, 2, 2, 64, jnp.float32),
+    (2, 256, 256, 4, 2, 64, jnp.float32),
+    (1, 128, 128, 4, 1, 128, jnp.bfloat16),   # MQA
+    (2, 64, 64, 2, 2, 32, jnp.float32),
+])
+def test_flash_attention_shapes(b, tq, tk, h, kh, dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (b, tq, h, dh), dtype)
+    k = rand(ks[1], (b, tk, kh, dh), dtype)
+    v = rand(ks[2], (b, tk, kh, dh), dtype)
+    got = ops.flash_attention(q, k, v, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(q, k, v)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_flash_attention_window():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = rand(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = rand(ks[2], (1, 256, 2, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, window=64, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(q, k, v, window=64)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = rand(ks[0], (1, 128, 2, 64), jnp.float32)
+    k = rand(ks[1], (1, 128, 2, 64), jnp.float32)
+    v = rand(ks[2], (1, 128, 2, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kh,dh,dtype", [
+    (2, 512, 4, 2, 64, jnp.float32),
+    (1, 1024, 8, 1, 128, jnp.bfloat16),
+    (3, 256, 2, 2, 32, jnp.float32),
+])
+def test_decode_attention(b, s, h, kh, dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (b, h, dh), dtype)
+    kc = rand(ks[1], (b, s, kh, dh), dtype)
+    vc = rand(ks[2], (b, s, kh, dh), dtype)
+    kv_len = jnp.array([s // 2 + 7 * i for i in range(b)], jnp.int32)
+    got = ops.decode_attention(q, kc, vc, kv_len, block_kv=128)
+    want = ref.decode_attention_ref(q, kc, vc, kv_len)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=atol)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 chunked recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,n,chunk", [
+    (1, 128, 2, 32, 32),
+    (2, 128, 1, 64, 64),
+    (1, 64, 3, 16, 16),
+])
+def test_rwkv6_scan(b, t, h, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    r = rand(ks[0], (b, t, h, n), jnp.float32)
+    k = rand(ks[1], (b, t, h, n), jnp.float32)
+    v = rand(ks[2], (b, t, h, n), jnp.float32)
+    logw = -jnp.exp(rand(ks[3], (b, t, h, n), jnp.float32) * 0.5)
+    u = rand(ks[4], (h, n), jnp.float32) * 0.1
+    got = ops.rwkv6_scan(r, k, v, logw, u, chunk=chunk)
+    want = ref.rwkv6_scan_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(got, want, atol=5e-4, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# rg-lru recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,w,chunk,block_w", [
+    (2, 128, 128, 64, 128),
+    (1, 256, 256, 128, 128),
+    (2, 64, 512, 32, 256),
+])
+def test_rglru_scan(b, t, w, chunk, block_w):
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    u = rand(ks[0], (b, t, w), jnp.float32)
+    w_r = rand(ks[1], (w,), jnp.float32) * 0.1
+    b_r = rand(ks[2], (w,), jnp.float32) * 0.1
+    w_i = rand(ks[3], (w,), jnp.float32) * 0.1
+    b_i = rand(ks[4], (w,), jnp.float32) * 0.1
+    lam = jnp.linspace(2.0, 6.0, w)
+    got = ops.rglru_scan(u, w_r, b_r, w_i, b_i, lam, chunk=chunk,
+                         block_w=block_w)
+    want = ref.rglru_scan_ref(u, w_r, b_r, w_i, b_i, lam)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped expert FFN
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,c,d,f,gated,dtype", [
+    (2, 128, 128, 256, True, jnp.float32),
+    (4, 128, 256, 512, True, jnp.bfloat16),
+    (2, 128, 128, 128, False, jnp.float32),
+])
+def test_moe_gmm(e, c, d, f, gated, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    x = rand(ks[0], (e, c, d), dtype) * 0.5
+    wg = rand(ks[1], (e, d, f), dtype) * d ** -0.5
+    wi = rand(ks[2], (e, d, f), dtype) * d ** -0.5
+    wo = rand(ks[3], (e, f, d), dtype) * f ** -0.5
+    got = ops.moe_gmm(x, wg, wi, wo, gated=gated, block_c=64, block_f=128,
+                      block_d=64)
+    want = ref.moe_gmm_ref(x, wg, wi, wo, gated=gated)
+    atol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_moe_gmm_matches_model_expert_ffn():
+    """Kernel == the model's einsum expert path (repro.models.moe)."""
+    from repro.models import moe as model_moe
+
+    class Cfg:
+        mlp = "swiglu"
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = rand(ks[0], (2, 64, 64), jnp.float32)
+    wg = rand(ks[1], (2, 64, 128), jnp.float32) * 0.1
+    wi = rand(ks[2], (2, 64, 128), jnp.float32) * 0.1
+    wo = rand(ks[3], (2, 128, 64), jnp.float32) * 0.1
+    got = ops.moe_gmm(x, wg, wi, wo, block_c=64, block_f=64, block_d=64)
+    want = model_moe._expert_ffn(x, wi, wg, wo, Cfg)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_moe_gmm_skip_matches_dense_on_live_experts():
+    """Count-aware GMM == dense GMM for live experts; empty experts 0."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    e, c, d, f = 4, 64, 64, 128
+    x = rand(ks[0], (e, c, d), jnp.float32) * 0.5
+    wg = rand(ks[1], (e, d, f), jnp.float32) * 0.1
+    wi = rand(ks[2], (e, d, f), jnp.float32) * 0.1
+    wo = rand(ks[3], (e, f, d), jnp.float32) * 0.1
+    counts = jnp.array([5, 0, 3, 0], jnp.int32)
+    got = ops.moe_gmm_skip(x, wg, wi, wo, counts, block_c=64, block_f=64,
+                           block_d=64)
+    want = ref.moe_gmm_ref(x, wg, wi, wo)
+    for i in range(e):
+        if int(counts[i]) > 0:
+            np.testing.assert_allclose(got[i], want[i], atol=2e-5,
+                                       rtol=2e-5)
+        else:
+            np.testing.assert_array_equal(np.asarray(got[i]), 0.0)

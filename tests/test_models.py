@@ -1,0 +1,189 @@
+"""Model-zoo tests: per-arch smoke (reduced config, one forward/train step,
+shape + finiteness asserts) and layer-level correctness oracles, including
+the prefill->decode consistency golden check for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.models import kvcache, layers, moe, rglru, rwkv6, transformer
+
+cb.load_all()
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+# ---------------------------------------------------------------------------
+# layer oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tq,tk,h,kh,dh,causal,window", [
+    (16, 16, 4, 2, 8, True, 0),
+    (8, 24, 4, 4, 16, False, 0),
+    (32, 32, 2, 1, 8, True, 12),
+])
+def test_flash_attention_matches_ref(tq, tk, h, kh, dh, causal, window):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (2, tq, h, dh))
+    k = jax.random.normal(k2, (2, tk, kh, dh))
+    v = jax.random.normal(k3, (2, tk, kh, dh))
+    got = layers.flash_attention(q, k, v, causal=causal, window=window,
+                                 block=8, q_offset=tk - tq)
+    want = layers.attention_ref(q, k, v, causal=causal, window=window,
+                                q_offset=tk - tq)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_local_attention_two_chunk_trick():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, t, h, dh, w = 2, 64, 2, 8, 16
+    q = jax.random.normal(k1, (b, t, h, dh))
+    k = jax.random.normal(k2, (b, t, h, dh))
+    v = jax.random.normal(k3, (b, t, h, dh))
+    got = transformer._local_attention(q, k, v, w)
+    want = layers.attention_ref(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_rwkv_chunked_matches_scan():
+    key = jax.random.PRNGKey(2)
+    b, t, h, n = 2, 64, 3, 8
+    ks = jax.random.split(key, 5)
+    r, k, v = (jax.random.normal(ks[i], (b, t, h, n)) for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, t, h, n)) * 0.5)
+    u = jax.random.normal(ks[4], (h, n)) * 0.1
+    s0 = jnp.zeros((b, h, n, n))
+    o1, s1 = rwkv6.recurrence_scan(r, k, v, logw, u, s0)
+    o2, s2 = rwkv6.recurrence_chunked(r, k, v, logw, u, s0, chunk=16)
+    np.testing.assert_allclose(o1, o2, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(s1, s2, atol=2e-4, rtol=2e-4)
+
+
+def test_rglru_associative_scan_matches_stepwise():
+    cfg = cb.get_config("recurrentgemma-9b").smoke()
+    p = rglru.init_rec_block(jax.random.PRNGKey(3), cfg)
+    b, t = 2, 12
+    u_c = jax.random.normal(jax.random.PRNGKey(4), (b, t, cfg.lru_width))
+    h0 = jnp.zeros((b, cfg.lru_width))
+    h_par, last_par = rglru.rglru_scan(p, u_c, h0)
+    h = h0
+    outs = []
+    for i in range(t):
+        o, h = rglru.rglru_step(p, u_c[:, i:i + 1], h)
+        outs.append(o[:, 0])
+    h_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(h_par, h_seq, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(last_par, h, atol=1e-5, rtol=1e-5)
+
+
+def test_moe_dense_routes_and_conserves():
+    cfg = cb.get_config("arctic-480b").smoke()
+    p = moe.init_moe(jax.random.PRNGKey(5), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 8, cfg.d_model))
+    y, aux = moe.moe_apply_dense(p, x, cfg)
+    assert y.shape == x.shape
+    assert jnp.all(jnp.isfinite(y))
+    # every token routes top_k slots, minus capacity drops
+    assert int(aux["expert_load"].sum()) <= 2 * 8 * cfg.top_k
+    assert int(aux["expert_load"].sum()) >= 2 * 8 * cfg.top_k * 0.5
+
+
+def test_mrope_sections_shapes():
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 6, 4, 16))
+    pos3 = jnp.stack([jnp.arange(6)] * 3, -1)[None].repeat(2, 0)
+    out = layers.apply_mrope(x, pos3, 1e4, (2, 3, 3))
+    assert out.shape == x.shape
+    # text-mode mrope (t=h=w) must equal plain rope
+    ref = layers.apply_rope(x, pos3[..., 0], 1e4)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# per-arch smoke: one train step + prefill/decode golden consistency
+# ---------------------------------------------------------------------------
+
+def make_batch(cfg, b=2, t=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    batch = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = jax.random.randint(key, (b, t), 0, cfg.vocab)
+    else:
+        batch["embeds"] = jax.random.normal(key, (b, t, cfg.d_model),
+                                            jnp.dtype(cfg.dtype))
+        batch["labels"] = jax.random.randint(key, (b, t), 0, cfg.vocab)
+    if cfg.pos == "mrope":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(t)[None, :, None], (b, t, 3)).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", cb.ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = cb.get_config(arch).smoke()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, aux = transformer.loss_fn(cfg, params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    grads = jax.grad(lambda p: transformer.loss_fn(cfg, p, batch)[0])(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), arch
+
+
+@pytest.mark.parametrize("arch", cb.ARCH_IDS)
+def test_smoke_prefill_decode_consistency(arch):
+    """Golden check: teacher-forced decode must reproduce full-seq logits."""
+    cfg = cb.get_config(arch).smoke()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+    b, t = 2, 16
+    batch = make_batch(cfg, b, t, seed=1)
+
+    # full forward logits at every position
+    x, _, _, ctx = transformer.forward(cfg, params, batch)
+    full_logits = transformer._logits(cfg, params, x, ctx)
+
+    # prefill on the first t0 tokens, then decode the rest one by one
+    t0 = t // 2
+    pre = {k: (v[:, :t0] if v.ndim > 1 else v) for k, v in batch.items()}
+    logits0, cache, _ = transformer.prefill(cfg, params, pre)
+    np.testing.assert_allclose(
+        np.asarray(logits0[:, 0], np.float32),
+        np.asarray(full_logits[:, t0 - 1], np.float32),
+        atol=2e-3, rtol=2e-3)
+
+    # pad attention caches out to t for decode writes
+    def pad_cache(seg_cache, types):
+        out = []
+        for j, bt in enumerate(types):
+            c = seg_cache[j]
+            if bt in ("attn", "moe"):
+                padlen = t - c["k"].shape[2]
+                c = {n: jnp.pad(c[n], ((0, 0), (0, 0), (0, padlen),
+                                       (0, 0), (0, 0))) for n in c}
+            out.append(c)
+        return out
+
+    segs = transformer.segments(cfg)
+    cache = [pad_cache(c, types) for c, (types, _) in zip(cache, segs)]
+
+    for step in range(t0, t):
+        db = {"positions": jnp.full((b,), step, jnp.int32)}
+        if cfg.embed_inputs:
+            db["tokens"] = batch["tokens"][:, step:step + 1]
+        else:
+            db["embeds"] = batch["embeds"][:, step:step + 1]
+        logits, cache, _ = transformer.decode_step(cfg, params, db, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full_logits[:, step], np.float32),
+            atol=2e-3, rtol=2e-3)
+
+
+def test_param_counts_match_config_estimates():
+    for arch in cb.ARCH_IDS:
+        cfg = cb.get_config(arch).smoke()
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        n = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(params))
+        est = cfg.param_count()
+        assert abs(n - est) / est < 0.35, (arch, n, est)

@@ -1,0 +1,105 @@
+"""Property tests for the sharding plans: every spec a plan emits must
+divide the tensor dims on the production meshes, for every arch, mode and
+strategy — the invariant the 64-cell dry-run rests on."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.models import transformer
+from repro.optim import adamw
+from repro.sharding.partition import ShardingPlan
+
+cb.load_all()
+
+
+class FakeMesh:
+    """Shape-only stand-in (plans never touch devices until .ns())."""
+
+    def __init__(self, shape_map):
+        self.shape = dict(shape_map)
+        self.axis_names = tuple(shape_map)
+        self.devices = np.empty((0,))
+
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16})]
+
+
+def axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def check_specs(mesh, specs, shapes):
+    leaves_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    leaves_t = jax.tree_util.tree_leaves(shapes)
+    assert len(leaves_s) == len(leaves_t)
+    for spec, shape in zip(leaves_s, leaves_t):
+        for dim, entry in zip(shape.shape, tuple(spec)):
+            size = axis_size(mesh, entry)
+            assert dim % size == 0, (spec, shape.shape)
+
+
+@pytest.mark.parametrize("arch", cb.ARCH_IDS)
+@pytest.mark.parametrize("mesh", MESHES, ids=["1pod", "2pod"])
+@pytest.mark.parametrize("mode", ["train", "prefill", "decode"])
+def test_param_specs_always_divide(arch, mesh, mode):
+    cfg = cb.get_config(arch)
+    plan = ShardingPlan(mesh, cfg, mode=mode)
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    check_specs(mesh, plan.param_specs(shapes), shapes)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "qwen1.5-110b"])
+def test_dp_strategy_specs_divide(arch):
+    cfg = cb.get_config(arch)
+    mesh = MESHES[0]
+    plan = ShardingPlan(mesh, cfg, mode="train")
+    plan.strategy_override = "dp"
+    plan.strategy = "dp"
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    check_specs(mesh, plan.param_specs(shapes), shapes)
+
+
+@pytest.mark.parametrize("arch", cb.ARCH_IDS)
+def test_cache_specs_always_divide(arch):
+    cfg = cb.get_config(arch)
+    mesh = MESHES[0]
+    plan = ShardingPlan(mesh, cfg, mode="decode")
+    shapes = jax.eval_shape(lambda: transformer.init_cache(cfg, 128, 32768))
+    check_specs(mesh, plan.cache_specs(shapes), shapes)
+
+
+@pytest.mark.parametrize("arch", ["arctic-480b", "qwen1.5-110b"])
+def test_optimizer_state_specs_divide(arch):
+    from repro.launch.dryrun import opt_config_for
+    from repro.train import step as train_step
+    cfg = cb.get_config(arch)
+    mesh = MESHES[0]
+    plan = ShardingPlan(mesh, cfg, mode="train")
+    shapes = train_step.abstract_state(cfg, opt_config_for(cfg))
+    check_specs(mesh, plan.param_specs(shapes.m), shapes.m)
+    check_specs(mesh, plan.param_specs(shapes.v), shapes.v)
+
+
+def test_full_attention_cache_is_seq_sharded():
+    cfg = cb.get_config("qwen1.5-110b")
+    mesh = MESHES[0]
+    plan = ShardingPlan(mesh, cfg, mode="decode")
+    shapes = jax.eval_shape(lambda: transformer.init_cache(cfg, 128, 32768))
+    specs = plan.cache_specs(shapes)
+    leaf = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(
+            x, jax.sharding.PartitionSpec))[0]
+    assert tuple(leaf)[:3] == (None, "data", "model")

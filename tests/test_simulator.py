@@ -1,0 +1,204 @@
+"""System tests for the cycle-approximate reconfigurable-core simulator,
+validated against the paper's published numbers (see EXPERIMENTS.md)."""
+import numpy as np
+import pytest
+
+from repro.core import isa, scheduler, simulator, traces
+
+
+@pytest.fixture(scope="module")
+def fm_traces():
+    return {n: traces.build_trace(n, 40_000) for n in traces.FM_BENCHES}
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 — fixed-ISA analytic model
+# ---------------------------------------------------------------------------
+
+def test_minver_f_speedup_matches_paper():
+    """Paper: minver 2106M -> 77M cycles with "F" (27.5x)."""
+    m = traces.mix_of("minver")
+    s = simulator.analytic_cpi(m, isa.RV32I) / simulator.analytic_cpi(m, isa.RV32IF)
+    assert s == pytest.approx(27.5, rel=0.02)
+
+
+def test_matmult_int_m_speedup_matches_paper():
+    m = traces.mix_of("matmult-int")
+    s = simulator.analytic_cpi(m, isa.RV32I) / simulator.analytic_cpi(m, isa.RV32IM)
+    assert s == pytest.approx(4.6, rel=0.02)
+
+
+def test_wikisort_imf_speedup_matches_paper():
+    """Paper: wikisort collective 2.9x for RV32IMF."""
+    m = traces.mix_of("wikisort")
+    s = simulator.analytic_cpi(m, isa.RV32I) / simulator.analytic_cpi(m, isa.RV32IMF)
+    assert s == pytest.approx(2.9, rel=0.05)
+
+
+def test_minver_rv32if_close_to_rv32imf():
+    """Paper: minver's RV32IF performance is very close to RV32IMF."""
+    m = traces.mix_of("minver")
+    ratio = simulator.analytic_cpi(m, isa.RV32IF) / simulator.analytic_cpi(m, isa.RV32IMF)
+    assert 1.0 <= ratio < 1.1
+
+
+def test_classification_matches_paper():
+    """Fig. 5: 5 FM-improved, 8 M-only, 9 insensitive; no F-only class."""
+    for n in traces.BENCHES:
+        m = traces.mix_of(n)
+        s_m = simulator.analytic_cpi(m, isa.RV32I) / simulator.analytic_cpi(m, isa.RV32IM)
+        s_f = simulator.analytic_cpi(m, isa.RV32I) / simulator.analytic_cpi(m, isa.RV32IF)
+        cls = traces.BENCHES[n].cls
+        if cls == traces.FM_CLASS:
+            assert s_m > 1.1 and s_f > 1.1, n
+        elif cls == traces.M_CLASS:
+            assert s_m > 1.1 and s_f == pytest.approx(1.0), n
+        else:
+            assert s_m < 1.3 and s_f == pytest.approx(1.0), n
+        # paper: "there is no class where a benchmark is only benefited
+        # from F and not from M"
+        assert not (s_f > 1.1 and s_m < 1.05), n
+
+
+def test_extension_absent_is_never_faster():
+    """ABI soft expansion must never beat hardware support."""
+    for n in traces.BENCHES:
+        m = traces.mix_of(n)
+        cpis = {s: simulator.analytic_cpi(m, isa.SPECS[s])
+                for s in ("RV32I", "RV32IM", "RV32IF", "RV32IMF")}
+        assert cpis["RV32IMF"] <= cpis["RV32IM"] + 1e-9
+        assert cpis["RV32IMF"] <= cpis["RV32IF"] + 1e-9
+        assert cpis["RV32IM"] <= cpis["RV32I"] + 1e-9
+        assert cpis["RV32IF"] <= cpis["RV32I"] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 — single-benchmark slot scenarios
+# ---------------------------------------------------------------------------
+
+def _speedup_vs_imf(trace, name, scenario, latency):
+    r = simulator.simulate_single(
+        trace, simulator.ReconfigConfig(num_slots=scenario.num_slots,
+                                        miss_latency=latency), scenario)
+    imf = simulator.analytic_cpi(traces.mix_of(name), isa.RV32IMF)
+    return imf / float(r.cpi)
+
+
+def test_zero_latency_reconfig_equals_imf(fm_traces):
+    """With free reconfiguration the core must match fixed RV32IMF."""
+    r = simulator.simulate_single(
+        fm_traces["nbody"],
+        simulator.ReconfigConfig(num_slots=4, miss_latency=0,
+                                 bs_miss_extra=0),
+        isa.SCENARIO_2)
+    imf = simulator.analytic_cpi(traces.mix_of("nbody"), isa.RV32IMF)
+    assert imf / float(r.cpi) == pytest.approx(1.0, rel=5e-3)
+
+
+def test_latency_ordering_monotone(fm_traces):
+    for n, t in fm_traces.items():
+        sp = [_speedup_vs_imf(t, n, isa.SCENARIO_2, L) for L in (10, 50, 250)]
+        assert sp[0] > sp[1] > sp[2], (n, sp)
+
+
+def test_scenario2_50c_average_near_paper(fm_traces):
+    """Paper: scenario 2 @ 50 cycles averages ~71% of RV32IMF."""
+    sp = [_speedup_vs_imf(t, n, isa.SCENARIO_2, 50)
+          for n, t in fm_traces.items()]
+    assert np.mean(sp) == pytest.approx(0.71, abs=0.06)
+
+
+def test_scenario_1_and_2_over_90pct_at_10c(fm_traces):
+    """Paper: scenarios 1 and 2 at 10-cycle run at over 90% of RV32IMF."""
+    for sc in (isa.SCENARIO_1, isa.SCENARIO_2):
+        sp = [_speedup_vs_imf(t, n, sc, 10) for n, t in fm_traces.items()]
+        assert np.mean(sp) > 0.88, (sc.name, sp)
+
+
+def test_scenario3_is_worst(fm_traces):
+    """Paper: one-slot-per-extension is the worst scenario."""
+    for L in (10, 50):
+        s3 = np.mean([_speedup_vs_imf(t, n, isa.SCENARIO_3, L)
+                      for n, t in fm_traces.items()])
+        s2 = np.mean([_speedup_vs_imf(t, n, isa.SCENARIO_2, L)
+                      for n, t in fm_traces.items()])
+        s1 = np.mean([_speedup_vs_imf(t, n, isa.SCENARIO_1, L)
+                      for n, t in fm_traces.items()])
+        assert s3 < s2 and s3 < s1
+
+
+def test_sporadic_benchmarks_beat_best_fixed_extension(fm_traces):
+    """Paper: s2@50c exceeds max(IM,IF) for st and wikisort."""
+    for n in ("st", "wikisort"):
+        m = traces.mix_of(n)
+        imf = simulator.analytic_cpi(m, isa.RV32IMF)
+        best_fixed = max(
+            imf / simulator.analytic_cpi(m, isa.RV32IM),
+            imf / simulator.analytic_cpi(m, isa.RV32IF))
+        rec = _speedup_vs_imf(fm_traces[n], n, isa.SCENARIO_2, 50)
+        assert rec > best_fixed, n
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — multi-program
+# ---------------------------------------------------------------------------
+
+def test_pair_slot_competition_and_quantum_effect():
+    """Pairs with different extension working sets compete for slots; a
+    longer scheduler quantum amortises the reconfiguration (paper §VI-C)."""
+    tr = np.stack([traces.build_trace("nbody", 60_000),
+                   traces.build_trace("cubic", 60_000)])
+    cfg = simulator.ReconfigConfig(num_slots=4, miss_latency=50)
+    out = {}
+    for q in (1_000, 20_000):
+        r = simulator.simulate_pair(
+            tr, cfg, isa.SCENARIO_2,
+            simulator.SchedulerConfig(quantum_cycles=q),
+            total_steps=120_000)
+        sp = []
+        for i, n in enumerate(("nbody", "cubic")):
+            imf = simulator.fixed_pair_cpi(
+                traces.mix_of(n), isa.RV32IMF,
+                simulator.SchedulerConfig(quantum_cycles=q))
+            sp.append(imf / float(np.asarray(r.cpi)[i]))
+        out[q] = np.mean(sp)
+        assert int(r.switches) > 0
+    assert out[20_000] > out[1_000]  # longer quantum -> better
+
+
+def test_pair_more_slots_is_better():
+    tr = np.stack([traces.build_trace("nbody", 60_000),
+                   traces.build_trace("matmult-int", 60_000)])
+    sched = simulator.SchedulerConfig(quantum_cycles=20_000)
+    cpis = {}
+    for s, scen in ((2, isa.SCENARIO_2_2SLOT), (4, isa.SCENARIO_2),
+                    (8, isa.SCENARIO_2_8SLOT)):
+        r = simulator.simulate_pair(
+            tr, simulator.ReconfigConfig(num_slots=s, miss_latency=50),
+            scen, sched, total_steps=120_000)
+        cpis[s] = float(np.asarray(r.cpi)[0])
+    assert cpis[2] >= cpis[4] >= cpis[8]
+
+
+def test_pair_set_matches_paper_counts():
+    assert len(scheduler.make_pairs()) == 50
+    assert len(scheduler.fm_fm_pairs()) == 10
+    assert len(scheduler.fm_m_pairs()) == 40
+
+
+# ---------------------------------------------------------------------------
+# trace model invariants
+# ---------------------------------------------------------------------------
+
+def test_trace_mix_matches_solved_mix():
+    for n in ("minver", "nbody", "matmult-int"):
+        t = traces.build_trace(n, 120_000)
+        got = traces.trace_mix(t)
+        want = traces.mix_of(n).frac
+        np.testing.assert_allclose(got, want, atol=0.012)
+
+
+def test_traces_deterministic():
+    a = traces.build_trace("cubic", 5_000, seed=3)
+    b = traces.build_trace("cubic", 5_000, seed=3)
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,116 @@
+"""Unit + property tests for the instruction disambiguator (exact LRU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import slots
+
+
+def run_sequence(num_slots, tags):
+    state = slots.init(num_slots)
+    hits = []
+    for t in tags:
+        res = slots.lookup(state, jnp.int32(t))
+        state = res.state
+        hits.append(bool(res.hit))
+    return state, hits
+
+
+class PyLRU:
+    """Reference LRU cache (python oracle)."""
+
+    def __init__(self, size):
+        self.size = size
+        self.order = []  # most recent last
+
+    def access(self, tag):
+        if tag < 0:
+            return True
+        if tag in self.order:
+            self.order.remove(tag)
+            self.order.append(tag)
+            return True
+        if len(self.order) >= self.size:
+            self.order.pop(0)
+        self.order.append(tag)
+        return False
+
+
+def test_cold_miss_then_hit():
+    state, hits = run_sequence(2, [5, 5, 5])
+    assert hits == [False, True, True]
+
+
+def test_unslotted_tag_never_misses_or_mutates():
+    state = slots.init(2)
+    res = slots.lookup(state, jnp.int32(-1))
+    assert bool(res.hit)
+    np.testing.assert_array_equal(res.state.tags, state.tags)
+
+
+def test_lru_eviction_order():
+    # fill 2 slots with 1,2; touch 1; insert 3 -> 2 evicted
+    _, hits = run_sequence(2, [1, 2, 1, 3, 1, 2])
+    assert hits == [False, False, True, False, True, False]
+
+
+def test_eviction_reports_victim_tag():
+    state = slots.init(1)
+    state = slots.lookup(state, jnp.int32(7)).state
+    res = slots.lookup(state, jnp.int32(9))
+    assert int(res.evicted_tag) == 7
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    num_slots=st.integers(min_value=1, max_value=6),
+    tags=st.lists(st.integers(min_value=-1, max_value=9), min_size=1,
+                  max_size=60),
+)
+def test_lru_matches_python_oracle(num_slots, tags):
+    """JAX exact-LRU == reference python LRU for arbitrary tag sequences."""
+    _, got = run_sequence(num_slots, tags)
+    ref = PyLRU(num_slots)
+    want = [ref.access(t) for t in tags]
+    assert got == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    num_slots=st.integers(min_value=1, max_value=5),
+    tags=st.lists(st.integers(min_value=0, max_value=8), min_size=1,
+                  max_size=40),
+)
+def test_occupancy_bounded_and_monotone(num_slots, tags):
+    state = slots.init(num_slots)
+    prev = 0
+    for t in tags:
+        state = slots.lookup(state, jnp.int32(t)).state
+        occ = int(slots.occupancy(state))
+        assert prev <= occ <= min(num_slots, len(set(tags)))
+        prev = occ
+
+
+def test_lookup_batch_matches_sequential():
+    tags = [3, 1, 3, 2, 4, 1, -1, 3]
+    _, seq_hits = run_sequence(3, tags)
+    state = slots.init(3)
+    _, batch_hits = slots.lookup_batch(state, jnp.array(tags, jnp.int32))
+    assert [bool(h) for h in batch_hits] == seq_hits
+
+
+def test_jit_and_vmap_compatible():
+    @jax.jit
+    def f(state, tags):
+        return slots.lookup_batch(state, tags)[1]
+
+    states = jax.vmap(lambda _: slots.init(2))(jnp.arange(3))
+    tags = jnp.array([[1, 2, 1], [1, 1, 1], [3, 4, 5]], jnp.int32)
+    hits = jax.vmap(lambda s, t: f(s, t))(states, tags)
+    np.testing.assert_array_equal(
+        np.asarray(hits),
+        [[False, False, True], [False, True, True],
+         [False, False, False]])
