@@ -2,6 +2,11 @@
 scenarios x {10, 50, 250}-cycle miss latencies, on the 5 FM-class
 benchmarks, as speedup relative to fixed RV32IMF (plus the max(IM, IF)
 fixed-extension reference series).
+
+Runs through `simulator.sweep_fleet` as P=1 fleets with a quantum no run
+can reach (a single program is never preempted), so the whole
+{5 benchmarks x 3 latencies} grid per scenario is one jitted call — the
+same machinery as the Fig. 7 multi-program sweeps.
 """
 from __future__ import annotations
 
@@ -15,28 +20,32 @@ LATENCIES = (10, 50, 250)
 SCENARIOS = (("s1", isa.SCENARIO_1), ("s2", isa.SCENARIO_2),
              ("s3", isa.SCENARIO_3))
 TRACE_LEN = 120_000
+# single program, never preempted
+NO_PREEMPT = simulator.SchedulerConfig.no_preempt()
 
 
 def run() -> tuple[list[str], dict]:
     rows = ["benchmark,series,latency,speedup_vs_IMF"]
     agg: dict = {}
-    for name in traces.FM_BENCHES:
-        trace = traces.build_trace(name, TRACE_LEN)
+    fleet = np.stack([traces.build_trace(n, TRACE_LEN)
+                      for n in traces.FM_BENCHES])[:, None, :]  # (5, 1, N)
+    imf = {n: simulator.analytic_cpi(traces.mix_of(n), isa.RV32IMF)
+           for n in traces.FM_BENCHES}
+    per_scen = {}
+    for sname, scen in SCENARIOS:
+        res = simulator.sweep_fleet(
+            fleet, LATENCIES, scen, NO_PREEMPT,
+            slot_counts=(scen.num_slots,), total_steps=TRACE_LEN)
+        per_scen[sname] = np.asarray(res.cpi)   # (5, 1, L, 1)
+    for bi, name in enumerate(traces.FM_BENCHES):
         mix = traces.mix_of(name)
-        imf = simulator.analytic_cpi(mix, isa.RV32IMF)
         best_fixed = max(
-            imf / simulator.analytic_cpi(mix, isa.RV32IM),
-            imf / simulator.analytic_cpi(mix, isa.RV32IF))
+            imf[name] / simulator.analytic_cpi(mix, isa.RV32IM),
+            imf[name] / simulator.analytic_cpi(mix, isa.RV32IF))
         rows.append(f"{name},max(IM;IF),-,{best_fixed:.3f}")
-        for sname, scen in SCENARIOS:
-            res = simulator.simulate_single_batch(
-                np.stack([trace] * len(LATENCIES)),
-                np.asarray(LATENCIES),
-                simulator.ReconfigConfig(num_slots=scen.num_slots,
-                                         miss_latency=0),
-                scen)
-            for lat, cpi in zip(LATENCIES, np.asarray(res.cpi)):
-                sp = imf / float(cpi)
+        for sname, _ in SCENARIOS:
+            for li, lat in enumerate(LATENCIES):
+                sp = imf[name] / float(per_scen[sname][bi, 0, li, 0])
                 rows.append(f"{name},{sname},{lat},{sp:.3f}")
                 agg.setdefault((sname, lat), []).append(sp)
     for (sname, lat), vals in sorted(agg.items()):

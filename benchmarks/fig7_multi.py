@@ -4,6 +4,12 @@ with 1K- vs 20K-cycle scheduler quanta; speedups vs fixed RV32IMF, plus the
 fixed RV32I/IM/IF references.  Validates the paper's aggregate anchors:
 4-slot@20K ~ 0.82x IMF average and 3.39x / 1.48x / 2.04x over I / IM / IF;
 quantum lengthening 1K->20K improves the reconfigurable series.
+
+The whole {50 pairs x 3 slot counts x miss latency} grid runs as ONE
+jitted `simulator.sweep_fleet` call per quantum (slot counts sweep via
+disambiguator masking).  `run_fleets` extends the experiment beyond the
+paper: P=4 fleets (`scheduler.make_fleets(4)`) across a miss-latency grid,
+again one jitted call.
 """
 from __future__ import annotations
 
@@ -13,47 +19,51 @@ import numpy as np
 
 from repro.core import isa, scheduler, simulator, traces
 
-SLOT_VARIANTS = (("2slot", isa.SCENARIO_2_2SLOT),
-                 ("4slot", isa.SCENARIO_2),
-                 ("8slot", isa.SCENARIO_2_8SLOT))
+SLOT_COUNTS = (2, 4, 8)
 QUANTA = (1_000, 20_000)
 TRACE_LEN = 60_000
 TOTAL_STEPS = 160_000
 MISS_LATENCY = 50
 
+# beyond-paper fleet sweep: 4-way mixes, miss-latency grid
+FLEET_K = 4
+FLEET_LATENCIES = (10, 50, 250)
+FLEET_TOTAL_STEPS = 240_000
+
 
 def run(pairs=None) -> tuple[list[str], dict]:
     pairs = pairs or scheduler.make_pairs()
-    tensor = scheduler.pair_traces(pairs, TRACE_LEN)
+    tensor = scheduler.fleet_traces(pairs, TRACE_LEN)
     rows = ["pair,series,quantum,avg_speedup_vs_IMF"]
     agg: dict = {}
 
     for q in QUANTA:
         sched = simulator.SchedulerConfig(quantum_cycles=q)
-        # fixed-ISA references (analytic pair CPI)
+        # fixed-ISA references (analytic fleet CPI)
         for spec_name in ("RV32I", "RV32IM", "RV32IF"):
             spec = isa.SPECS[spec_name]
             for (a, b) in pairs:
                 sp = []
                 for n in (a, b):
                     mix = traces.mix_of(n)
-                    sp.append(simulator.fixed_pair_cpi(mix, isa.RV32IMF,
-                                                       sched) /
-                              simulator.fixed_pair_cpi(mix, spec, sched))
+                    sp.append(simulator.fixed_fleet_cpi(mix, isa.RV32IMF,
+                                                        sched) /
+                              simulator.fixed_fleet_cpi(mix, spec, sched))
                 agg.setdefault((spec_name, q), []).append(float(np.mean(sp)))
-        # reconfigurable variants (simulated)
-        for vname, scen in SLOT_VARIANTS:
-            cfg = simulator.ReconfigConfig(num_slots=scen.num_slots,
-                                           miss_latency=MISS_LATENCY)
-            res = simulator.simulate_pair_batch(
-                tensor, cfg, scen, sched, total_steps=TOTAL_STEPS)
-            cpis = np.asarray(res.cpi)          # (B, 2)
+        # reconfigurable slot-count variants: one jitted sweep over the
+        # {pairs x slot counts x latency} grid
+        res = simulator.sweep_fleet(
+            tensor, [MISS_LATENCY], isa.SCENARIO_2, sched,
+            slot_counts=SLOT_COUNTS, total_steps=TOTAL_STEPS)
+        cpis = np.asarray(res.cpi)          # (B, K, 1, 2)
+        for k, nslots in enumerate(SLOT_COUNTS):
+            vname = f"{nslots}slot"
             for i, (a, b) in enumerate(pairs):
                 sp = []
                 for j, n in enumerate((a, b)):
-                    ref = simulator.fixed_pair_cpi(
+                    ref = simulator.fixed_fleet_cpi(
                         traces.mix_of(n), isa.RV32IMF, sched)
-                    sp.append(ref / cpis[i, j])
+                    sp.append(ref / cpis[i, k, 0, j])
                 val = float(np.mean(sp))
                 agg.setdefault((vname, q), []).append(val)
                 rows.append(f"{a}+{b},{vname},{q},{val:.3f}")
@@ -72,13 +82,47 @@ def run(pairs=None) -> tuple[list[str], dict]:
     return rows, agg
 
 
+def run_fleets(k: int = FLEET_K, max_fleets: int | None = 24,
+               quantum: int = 20_000) -> tuple[list[str], dict]:
+    """Beyond-paper: k-way fleets x miss-latency grid, one jitted call."""
+    fleets = scheduler.make_fleets(k)
+    if max_fleets is not None:
+        fleets = fleets[:max_fleets]
+    tensor = scheduler.fleet_traces(fleets, TRACE_LEN)
+    sched = simulator.SchedulerConfig(quantum_cycles=quantum)
+    res = simulator.sweep_fleet(
+        tensor, FLEET_LATENCIES, isa.SCENARIO_2, sched,
+        slot_counts=(4,), total_steps=FLEET_TOTAL_STEPS)
+    cpis = np.asarray(res.cpi)              # (B, 1, L, k)
+    rows = [f"fleet,latency,avg_speedup_vs_IMF (P={k}, 4 slots, "
+            f"quantum {quantum})"]
+    agg: dict = {}
+    refs = {n: simulator.fixed_fleet_cpi(traces.mix_of(n), isa.RV32IMF,
+                                         sched)
+            for n in {n for f in fleets for n in f}}
+    for li, lat in enumerate(FLEET_LATENCIES):
+        for i, fleet in enumerate(fleets):
+            sp = float(np.mean([refs[n] / cpis[i, 0, li, j]
+                                for j, n in enumerate(fleet)]))
+            agg.setdefault(lat, []).append(sp)
+            rows.append(f"{'+'.join(fleet)},{lat},{sp:.3f}")
+    for lat, vals in sorted(agg.items()):
+        rows.append(f"AVERAGE,{lat},{np.mean(vals):.3f}")
+    rows.append(f"# {len(fleets)} fleets of {k}; slot competition grows "
+                "with P at fixed slot count (avg falls with latency)")
+    return rows, agg
+
+
 def main(print_fn=print):
     t0 = time.time()
     rows, _ = run()
     for row in rows[-12:]:
         print_fn(row)
+    frows, _ = run_fleets()
+    for row in frows[-6:]:
+        print_fn(row)
     print_fn(f"# fig7 done in {time.time() - t0:.1f}s "
-             f"({len(rows)} rows total)")
+             f"({len(rows) + len(frows)} rows total)")
 
 
 if __name__ == "__main__":

@@ -30,10 +30,15 @@ import numpy as np
 
 from repro.configs import base as cb
 from repro.models import transformer
-from repro.serve.engine import EngineConfig, SlotServeEngine, Tenant
+from repro.serve.engine import (EngineConfig, SlotServeEngine, Tenant,
+                                estimate_fleet_contention)
 
 STEPS = 96
 SHARDS = 16
+
+# instruction-mix profiles backing the 4 tenants' contention estimate:
+# mixed FM/M working sets, like the banded expert sets below
+TENANT_PROFILES = ("nbody", "minver", "matmult-int", "cubic")
 
 
 def make_tenants(cfg, n=4, batch=8, width=16):
@@ -91,6 +96,19 @@ def run() -> list[str]:
                 f"slots,{slots},{bias},{rep['hit_rate']:.3f},{live:.2f},"
                 f"{per_step / 1e9:.2f},{per_step / 819e9 * 1e3:.3f},"
                 f"{base_bytes / per_step:.2f}x")
+
+    # core-level contention estimate for the same 4-tenant mix, from the
+    # fleet simulator behind the Fig. 7 sweeps (serve-layer endpoint)
+    rows.append("fleet,tenant,profile,fleet_cpi,solo_cpi,slowdown")
+    for slots in (2, 4):
+        est = estimate_fleet_contention(
+            list(TENANT_PROFILES), num_slots=slots,
+            trace_len=30_000, total_steps=80_000)
+        for key, t in est["tenants"].items():
+            i, prof = key.split(":", 1)
+            rows.append(
+                f"fleet,{slots}slot/t{i},{prof},{t['fleet_cpi']:.3f},"
+                f"{t['solo_cpi']:.3f},{t['contention_slowdown']:.2f}x")
     return rows
 
 

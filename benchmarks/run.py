@@ -45,6 +45,16 @@ def bench_fig7():
     return lines, head[2:]
 
 
+def bench_fleet_sweep():
+    """Beyond-paper P=4 fleet sweep (one jitted sweep_fleet call)."""
+    from benchmarks import fig7_multi
+    lines, agg = fig7_multi.run_fleets()
+    import numpy as np
+    derived = "; ".join(f"P4_avg@{lat}c={np.mean(v):.3f}"
+                        for lat, v in sorted(agg.items()))
+    return lines, derived
+
+
 def bench_expert_slots():
     from benchmarks import bench_expert_slots as mod
     lines = _capture(mod.main)
@@ -75,6 +85,7 @@ BENCHES = {
     "fig5_classification": bench_fig5,
     "fig6_single": bench_fig6,
     "fig7_multi": bench_fig7,
+    "fleet_sweep": bench_fleet_sweep,
     "expert_slots": bench_expert_slots,
     "bitstream_study": bench_bitstream_study,
     "perf_slot_decode": bench_perf_slot_decode,

@@ -371,6 +371,20 @@ def analyze_module(text: str) -> dict:
 # legacy helpers (kept for tests / quick greps)
 # ---------------------------------------------------------------------------
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalised view of ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax (including the pinned 0.4.37) returns a per-device *list* of
+    property dicts; newer jax returns a single flat dict.  Callers always
+    want one flat mapping — for a per-device list we take device 0 (SPMD
+    programs are identical across devices).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def collective_stats(hlo_text: str) -> dict:
     res = analyze_module(hlo_text)
     out = dict(res["collectives"])

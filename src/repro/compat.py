@@ -1,0 +1,70 @@
+"""Version-compatibility shims for the pinned jax (0.4.37).
+
+The repo pins jax 0.4.37 (see pyproject.toml); newer jax moved several
+APIs that this tree uses.  Every module that needs a moved symbol imports
+it from here so the resolution logic lives in exactly one place:
+
+  * ``shard_map`` — top-level ``jax.shard_map`` only exists on jax >= 0.6;
+    on the pinned version it lives at ``jax.experimental.shard_map`` (and
+    spells the replication-check kwarg ``check_rep``, not ``check_vma``).
+  * ``keystr`` — the ``simple``/``separator`` kwargs are newer than the pin.
+
+Keep this module dependency-light: it is imported at the bottom of the
+import graph (core, kernels, models, optim, sharding all route through
+it), so it must never import any other ``repro`` module.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: promoted to the top-level namespace
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # pinned 0.4.x: still experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import functools as _functools
+import inspect as _inspect
+
+_SHARD_MAP_PARAMS = frozenset(
+    _inspect.signature(_shard_map).parameters)
+
+
+@_functools.wraps(_shard_map)
+def shard_map(f, *args, **kwargs):
+    """`shard_map` accepting both kwarg spellings of replication checking.
+
+    jax >= 0.6 renamed ``check_rep`` to ``check_vma``; callers here use the
+    new spelling, which this wrapper translates for the pinned 0.4.37
+    (and vice versa on newer jax, should someone pass the old one).
+    """
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, *args, **kwargs)
+
+def keystr(path, *, simple: bool = False, separator: str = "") -> str:
+    """``jax.tree_util.keystr`` with the ``simple``/``separator`` kwargs.
+
+    Newer jax grew ``keystr(path, simple=True, separator="/")``; the pinned
+    0.4.37 only accepts the bare path.  The simple form strips the
+    ``DictKey``/``GetAttrKey``/``SequenceKey`` punctuation down to the raw
+    key names, which is what the sharding rules match against.
+    """
+    try:
+        return jax.tree_util.keystr(path, simple=simple, separator=separator)
+    except TypeError:
+        pass
+    if not simple:
+        return jax.tree_util.keystr(path)
+
+    def _name(k):
+        for attr in ("key", "name", "idx"):
+            if hasattr(k, attr):
+                return str(getattr(k, attr))
+        return str(k)
+
+    return separator.join(_name(k) for k in path)
+
+
+__all__ = ["shard_map", "keystr"]

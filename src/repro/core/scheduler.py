@@ -1,4 +1,4 @@
-"""Multi-program experiment construction (paper §VI-C).
+"""Multi-program experiment construction (paper §VI-C, generalised to fleets).
 
 The paper pairs benchmarks under FreeRTOS's round-robin scheduler:
 
@@ -9,8 +9,14 @@ for 50 combinations total; pairs that do not compete for slots (M-only with
 M-only, or anything with an insensitive benchmark) are omitted, because every
 granularity scenario fits the whole "M" extension.
 
+`make_fleets(k)` extends the same construction to k-way mixes: C(5,k)
+all-FM fleets plus C(5,k-1) x 8 fleets with one M-only member — slot
+competition is guaranteed because every fleet carries at least k-1 FM
+working sets.  `make_pairs()` is exactly `make_fleets(2)`.
+
 `SchedulerConfig` itself lives in `repro.core.simulator`; this module builds
-the pair set and the per-pair trace tensors.
+the fleet sets and the (B, P, N) trace tensors for
+`repro.core.simulator.sweep_fleet` / `simulate_pair_batch`.
 """
 from __future__ import annotations
 
@@ -22,12 +28,26 @@ from repro.core import traces
 from repro.core.simulator import SchedulerConfig  # noqa: F401  (re-export)
 
 
-def make_pairs() -> list[tuple[str, str]]:
-    """The paper's 50 benchmark combinations (§VI-C)."""
+def make_fleets(k: int) -> list[tuple[str, ...]]:
+    """All slot-competing k-way benchmark fleets (k >= 2).
+
+    C(|FM|, k) all-FM fleets, then C(|FM|, k-1) x |M| fleets of FM-class
+    programs joined by one M-only program.  For k=2 this is the paper's 50
+    combinations in their original order.
+    """
+    if k < 2:
+        raise ValueError(f"fleets need at least 2 programs, got k={k}")
     fm = traces.FM_BENCHES
     m = traces.M_BENCHES
-    pairs = list(itertools.combinations(fm, 2))          # 10
-    pairs += [(a, b) for a in fm for b in m]             # 40
+    fleets = list(itertools.combinations(fm, k))
+    fleets += [c + (b,) for c in itertools.combinations(fm, k - 1)
+               for b in m]
+    return fleets
+
+
+def make_pairs() -> list[tuple[str, str]]:
+    """The paper's 50 benchmark combinations (§VI-C) — the P=2 fleet set."""
+    pairs = make_fleets(2)
     assert len(pairs) == 50
     return pairs
 
@@ -40,12 +60,16 @@ def fm_m_pairs() -> list[tuple[str, str]]:
     return [(a, b) for a in traces.FM_BENCHES for b in traces.M_BENCHES]
 
 
-def pair_traces(pairs: list[tuple[str, str]], length: int = 150_000,
-                seed: int = 0) -> np.ndarray:
-    """(B, 2, N) int32 trace tensor for `simulate_pair_batch`.
+def fleet_traces(fleets: list[tuple[str, ...]], length: int = 150_000,
+                 seed: int = 0) -> np.ndarray:
+    """(B, P, N) int32 trace tensor for `sweep_fleet`.
 
-    Traces are cached per benchmark (they are deterministic per seed).
+    Every fleet must have the same size P.  Traces are cached per benchmark
+    (they are deterministic per seed).
     """
+    sizes = {len(f) for f in fleets}
+    if len(sizes) != 1:
+        raise ValueError(f"mixed fleet sizes {sorted(sizes)}")
     cache: dict[str, np.ndarray] = {}
 
     def get(name: str) -> np.ndarray:
@@ -53,4 +77,10 @@ def pair_traces(pairs: list[tuple[str, str]], length: int = 150_000,
             cache[name] = traces.build_trace(name, length, seed)
         return cache[name]
 
-    return np.stack([np.stack([get(a), get(b)]) for a, b in pairs])
+    return np.stack([np.stack([get(n) for n in fleet]) for fleet in fleets])
+
+
+def pair_traces(pairs: list[tuple[str, str]], length: int = 150_000,
+                seed: int = 0) -> np.ndarray:
+    """(B, 2, N) trace tensor — the P=2 special case of `fleet_traces`."""
+    return fleet_traces(pairs, length, seed)

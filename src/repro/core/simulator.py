@@ -14,7 +14,11 @@ reconfiguration technology behind a configurable miss-latency constant
 Multi-programming (Fig. 7) adds a FreeRTOS-style round-robin scheduler with
 a cycle quantum and a context-switch handler cost; slot state deliberately
 persists across switches (the architecture's whole point — shared extensions
-stay resident, §IV).
+stay resident, §IV).  The scheduler runs over arbitrary fleets of P programs
+(`simulate_many`), each with its own slot taxonomy (per-program tag tables),
+and `sweep_fleet` crosses {fleets x slot counts x miss latencies} in one
+jitted vmap^3 — slot counts sweep dynamically by masking a max-size
+disambiguator.  The paper's pair experiments are the P=2 special case.
 """
 from __future__ import annotations
 
@@ -31,9 +35,11 @@ from repro.core.traces import Mix, analytic_cpi  # re-export for callers
 
 __all__ = [
     "ReconfigConfig", "SchedulerConfig", "SimResult", "PairResult",
+    "FleetResult", "fleet_tag_table",
     "simulate_single", "simulate_single_batch",
+    "simulate_many", "sweep_fleet",
     "simulate_pair", "simulate_pair_batch",
-    "analytic_cpi", "fixed_pair_cpi",
+    "analytic_cpi", "fixed_pair_cpi", "fixed_fleet_cpi",
 ]
 
 
@@ -47,6 +53,12 @@ class ReconfigConfig:
     bs_miss_extra: int = 100    # added cycles when the bitstream cache misses
 
 
+# quantum no run can reach: larger than any reachable cycle count, yet far
+# enough below int32 overflow that the q_cycles accumulator stays safe.
+# Use it (via SchedulerConfig.no_preempt()) for solo/unpreempted runs.
+NO_PREEMPT_QUANTUM = 1 << 30
+
+
 @dataclass(frozen=True)
 class SchedulerConfig:
     """Round-robin OS scheduler model (paper §V-B, §VI-C)."""
@@ -54,6 +66,12 @@ class SchedulerConfig:
     quantum_cycles: int = 20_000
     handler_cycles: int = 150   # timer-interrupt + context-switch routine
                                 # (incl. the 32 FP registers added in §V-B)
+
+    @classmethod
+    def no_preempt(cls, handler_cycles: int = 150) -> "SchedulerConfig":
+        """A scheduler that never fires — for solo-program references."""
+        return cls(quantum_cycles=NO_PREEMPT_QUANTUM,
+                   handler_cycles=handler_cycles)
 
 
 class SimResult(NamedTuple):
@@ -83,155 +101,247 @@ class PairResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def _step_tables(instr_tag: np.ndarray):
-    hw = jnp.asarray(isa.INSTR_HW_CYCLES, jnp.int32)
-    tags = jnp.asarray(instr_tag, jnp.int32)
-    return hw, tags
-
-
-@functools.partial(jax.jit, static_argnames=("num_slots", "bs_entries"))
 def _simulate_single(trace, instr_tag, miss_latency, num_slots: int,
                      bs_entries: int, bs_miss_extra):
-    hw, tags = _step_tables(instr_tag)
-    init = (
-        slots.init(num_slots),
-        slots.init(bs_entries),
-        jnp.int32(0),  # cycles
-        jnp.int32(0),  # slot misses
-        jnp.int32(0),  # bitstream-cache misses
-    )
+    """P=1 special case of the fleet scan: one program, never preempted.
 
-    def step(carry, ins):
-        slot_st, bs_st, cycles, miss, bsmiss = carry
-        tag = tags[ins]
-        res = slots.lookup(slot_st, tag)
-        # on a disambiguator miss the bitstream is fetched through the
-        # bitstream cache; a miss there goes to the unified L2 (extra cost)
-        bs_res = slots.lookup(bs_st, jnp.where(res.hit, jnp.int32(-1), tag))
-        cost = hw[ins]
-        cost = cost + jnp.where(res.hit, 0, miss_latency).astype(jnp.int32)
-        cost = cost + jnp.where(res.hit | bs_res.hit, 0,
-                                bs_miss_extra).astype(jnp.int32)
-        return (
-            res.state, bs_res.state, cycles + cost,
-            miss + (~res.hit).astype(jnp.int32),
-            bsmiss + (~(res.hit | bs_res.hit)).astype(jnp.int32),
-        ), None
+    One cost model lives in `_fleet_step_fn`; the single-program path is a
+    wrapper so disambiguator/bitstream accounting cannot drift between the
+    Fig. 6 (single) and Fig. 7 (multi-program) experiments.
+    """
+    r = _simulate_fleet_impl(
+        trace[None, :], instr_tag[None, :], miss_latency,
+        jnp.int32(num_slots), jnp.int32(NO_PREEMPT_QUANTUM), jnp.int32(0),
+        num_slots, bs_entries, bs_miss_extra, trace.shape[0])
+    return SimResult(r.cycles[0], r.instructions[0], r.slot_misses[0],
+                     r.bs_misses[0])
 
-    (slot_st, bs_st, cycles, miss, bsmiss), _ = jax.lax.scan(step, init, trace)
-    n = jnp.int32(trace.shape[0])
-    return SimResult(cycles, n, miss, bsmiss)
+
+_simulate_single_jit = functools.partial(
+    jax.jit, static_argnames=("num_slots", "bs_entries"))(_simulate_single)
 
 
 def simulate_single(trace: np.ndarray, cfg: ReconfigConfig,
                     scenario: isa.SlotScenario) -> SimResult:
-    return _simulate_single(
-        jnp.asarray(trace, jnp.int32), scenario.instr_tag,
-        jnp.int32(cfg.miss_latency), cfg.num_slots,
-        cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra))
+    return _simulate_single_jit(
+        jnp.asarray(trace, jnp.int32),
+        jnp.asarray(scenario.instr_tag, jnp.int32),
+        jnp.int32(cfg.miss_latency), num_slots=cfg.num_slots,
+        bs_entries=cfg.bs_cache_entries,
+        bs_miss_extra=jnp.int32(cfg.bs_miss_extra))
 
 
 def simulate_single_batch(traces: np.ndarray, miss_latencies: np.ndarray,
                           cfg: ReconfigConfig,
                           scenario: isa.SlotScenario) -> SimResult:
     """vmap over (trace, miss latency) lanes with a shared scenario."""
+    tag = jnp.asarray(scenario.instr_tag, jnp.int32)
     fn = jax.vmap(
-        lambda t, L: _simulate_single(
-            t, scenario.instr_tag, L, cfg.num_slots,
-            cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra)))
+        lambda t, L: _simulate_single_jit(
+            t, tag, L, num_slots=cfg.num_slots,
+            bs_entries=cfg.bs_cache_entries,
+            bs_miss_extra=jnp.int32(cfg.bs_miss_extra)))
     return fn(jnp.asarray(traces, jnp.int32),
               jnp.asarray(miss_latencies, jnp.int32))
 
 
 # ---------------------------------------------------------------------------
-# Multi-program (round-robin scheduler)
+# Multi-program (round-robin scheduler): the N-program fleet simulator
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps"))
-def _simulate_pair(traces, instr_tag, miss_latency, quantum, handler,
-                   num_slots: int, bs_entries: int, bs_miss_extra,
-                   total_steps: int):
-    hw, tags = _step_tables(instr_tag)
+class FleetResult(NamedTuple):
+    """Per-program counters of an N-program fleet run.
+
+    Leading axes are whatever grid the caller swept (fleets / slot counts /
+    miss latencies); the trailing axis is the program index within a fleet.
+    """
+
+    cycles: jnp.ndarray        # (..., P) attributed cycles (incl. handler)
+    instructions: jnp.ndarray  # (..., P)
+    slot_misses: jnp.ndarray   # (..., P)
+    bs_misses: jnp.ndarray     # (..., P)
+    switches: jnp.ndarray      # (...)  context switches
+
+    @property
+    def cpi(self):
+        return self.cycles / jnp.maximum(self.instructions, 1)
+
+
+def fleet_tag_table(scenarios, num_programs: int) -> np.ndarray:
+    """(P, NUM_INSTRUCTIONS) per-program disambiguator-tag table.
+
+    `scenarios` is either one `SlotScenario` shared by every program or a
+    sequence of `num_programs` of them — per-program tables let an FM-class
+    and an M-class program disagree about which opcodes are slotted (their
+    binaries were compiled against different extension sets, paper §IV).
+    """
+    if isinstance(scenarios, isa.SlotScenario):
+        return np.stack([scenarios.instr_tag] * num_programs)
+    scenarios = list(scenarios)
+    if len(scenarios) != num_programs:
+        raise ValueError(
+            f"{len(scenarios)} scenarios for {num_programs} programs")
+    return np.stack([s.instr_tag for s in scenarios])
+
+
+def _fleet_step_fn(traces, tags, hw, miss_latency, active_slots, quantum,
+                   handler, bs_miss_extra):
+    """Round-robin step over a (P, N) trace tensor with per-program tags."""
     num_progs, trace_len = traces.shape
 
-    class Carry(NamedTuple):
-        slot_st: slots.SlotState
-        bs_st: slots.SlotState
-        cursors: jnp.ndarray   # (P,)
-        active: jnp.ndarray    # ()
-        q_cycles: jnp.ndarray  # ()
-        cycles: jnp.ndarray    # (P,)
-        instrs: jnp.ndarray    # (P,)
-        misses: jnp.ndarray    # (P,)
-        switches: jnp.ndarray  # ()
-
-    init = Carry(
-        slots.init(num_slots), slots.init(bs_entries),
-        jnp.zeros((num_progs,), jnp.int32), jnp.int32(0), jnp.int32(0),
-        jnp.zeros((num_progs,), jnp.int32),
-        jnp.zeros((num_progs,), jnp.int32),
-        jnp.zeros((num_progs,), jnp.int32),
-        jnp.int32(0),
-    )
-
-    def step(c: Carry, _):
-        p = c.active
-        ins = traces[p, jnp.remainder(c.cursors[p], trace_len)]
-        tag = tags[ins]
-        res = slots.lookup(c.slot_st, tag)
+    def step(c, _):
+        p = c["active"]
+        ins = traces[p, jnp.remainder(c["cursors"][p], trace_len)]
+        tag = tags[p, ins]
+        res = slots.lookup(c["slot_st"], tag, active_slots)
+        # on a disambiguator miss the bitstream is fetched through the
+        # bitstream cache; a miss there goes to the unified L2 (extra cost)
         bs_res = slots.lookup(
-            c.bs_st, jnp.where(res.hit, jnp.int32(-1), tag))
+            c["bs_st"], jnp.where(res.hit, jnp.int32(-1), tag))
         cost = hw[ins]
         cost = cost + jnp.where(res.hit, 0, miss_latency).astype(jnp.int32)
         cost = cost + jnp.where(res.hit | bs_res.hit, 0,
                                 bs_miss_extra).astype(jnp.int32)
 
-        q = c.q_cycles + cost
+        q = c["q_cycles"] + cost
         do_switch = q >= quantum
         # the outgoing program pays the interrupt-handler cycles, mirroring
         # the paper's observation that short quanta inflate all runtimes
         cost_p = cost + jnp.where(do_switch, handler, 0).astype(jnp.int32)
 
-        return Carry(
-            slot_st=res.state,
-            bs_st=bs_res.state,
-            cursors=c.cursors.at[p].add(1),
-            active=jnp.where(do_switch, (p + 1) % num_progs, p),
-            q_cycles=jnp.where(do_switch, 0, q),
-            cycles=c.cycles.at[p].add(cost_p),
-            instrs=c.instrs.at[p].add(1),
-            misses=c.misses.at[p].add((~res.hit).astype(jnp.int32)),
-            switches=c.switches + do_switch.astype(jnp.int32),
-        ), None
+        # slot/bitstream state deliberately persists across the switch —
+        # shared extensions stay resident (the architecture's point, §IV)
+        return {
+            "slot_st": res.state,
+            "bs_st": bs_res.state,
+            "cursors": c["cursors"].at[p].add(1),
+            "active": jnp.where(do_switch, (p + 1) % num_progs, p),
+            "q_cycles": jnp.where(do_switch, 0, q),
+            "cycles": c["cycles"].at[p].add(cost_p),
+            "instrs": c["instrs"].at[p].add(1),
+            "misses": c["misses"].at[p].add((~res.hit).astype(jnp.int32)),
+            "bs_misses": c["bs_misses"].at[p].add(
+                (~(res.hit | bs_res.hit)).astype(jnp.int32)),
+            "switches": c["switches"] + do_switch.astype(jnp.int32),
+        }, None
 
+    return step
+
+
+def _simulate_fleet_impl(traces, tag_table, miss_latency, active_slots,
+                         quantum, handler, num_slots: int, bs_entries: int,
+                         bs_miss_extra, total_steps: int) -> FleetResult:
+    """(P, N) traces + (P, num_opcodes) tags -> per-program FleetResult.
+
+    `num_slots` is the *allocated* (static) disambiguator size;
+    `active_slots` (traced) masks it down so slot count is a sweep axis.
+    """
+    hw = jnp.asarray(isa.INSTR_HW_CYCLES, jnp.int32)
+    tags = jnp.asarray(tag_table, jnp.int32)
+    num_progs = traces.shape[0]
+
+    init = {
+        "slot_st": slots.init(num_slots),
+        "bs_st": slots.init(bs_entries),
+        "cursors": jnp.zeros((num_progs,), jnp.int32),
+        "active": jnp.int32(0),
+        "q_cycles": jnp.int32(0),
+        "cycles": jnp.zeros((num_progs,), jnp.int32),
+        "instrs": jnp.zeros((num_progs,), jnp.int32),
+        "misses": jnp.zeros((num_progs,), jnp.int32),
+        "bs_misses": jnp.zeros((num_progs,), jnp.int32),
+        "switches": jnp.int32(0),
+    }
+    step = _fleet_step_fn(traces, tags, hw, miss_latency, active_slots,
+                          quantum, handler, bs_miss_extra)
     final, _ = jax.lax.scan(step, init, None, length=total_steps)
-    return PairResult(final.cycles, final.instrs, final.misses,
-                      final.switches)
+    return FleetResult(final["cycles"], final["instrs"], final["misses"],
+                       final["bs_misses"], final["switches"])
+
+
+_simulate_fleet = functools.partial(
+    jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps"))(
+        _simulate_fleet_impl)
+
+
+def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
+                  scenarios, sched: SchedulerConfig,
+                  total_steps: int = 400_000) -> FleetResult:
+    """Round-robin fleet of P programs sharing one reconfigurable core.
+
+    traces: (P, N) int32 instruction ids; `scenarios` is one shared
+    `SlotScenario` or a length-P sequence (per-program slot taxonomies).
+    """
+    traces = jnp.asarray(traces, jnp.int32)
+    table = fleet_tag_table(scenarios, traces.shape[0])
+    return _simulate_fleet(
+        traces, table, jnp.int32(cfg.miss_latency),
+        jnp.int32(cfg.num_slots), jnp.int32(sched.quantum_cycles),
+        jnp.int32(sched.handler_cycles), cfg.num_slots,
+        cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra), total_steps)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps"))
+def _sweep_fleet(fleets, tag_table, miss_latencies, slot_counts, quantum,
+                 handler, num_slots: int, bs_entries: int, bs_miss_extra,
+                 total_steps: int) -> FleetResult:
+    def one(t, s, lat):
+        return _simulate_fleet_impl(
+            t, tag_table, lat, s, quantum, handler, num_slots, bs_entries,
+            bs_miss_extra, total_steps)
+
+    f = jax.vmap(one, in_axes=(None, None, 0))   # miss-latency axis
+    f = jax.vmap(f, in_axes=(None, 0, None))     # slot-count axis
+    f = jax.vmap(f, in_axes=(0, None, None))     # fleet axis
+    return f(fleets, slot_counts, miss_latencies)
+
+
+def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
+                sched: SchedulerConfig, *, slot_counts,
+                bs_cache_entries: int = 64, bs_miss_extra: int = 100,
+                total_steps: int = 400_000) -> FleetResult:
+    """One jitted call over the {fleets x slot counts x miss latencies} grid.
+
+    fleets: (B, P, N) int32 traces.  Slot counts are swept by masking one
+    max-size disambiguator (`slots.lookup`'s `num_active`), so the whole
+    grid — including the slot-count axis, normally a static shape — runs as
+    a single compiled `vmap^3`.  Result axes: (B, K_slots, L_lat, P).
+    """
+    fleets = jnp.asarray(fleets, jnp.int32)
+    table = fleet_tag_table(scenarios, fleets.shape[1])
+    counts = jnp.asarray(slot_counts, jnp.int32).reshape(-1)
+    lats = jnp.asarray(miss_latencies, jnp.int32).reshape(-1)
+    s_max = int(np.max(np.asarray(slot_counts)))
+    return _sweep_fleet(
+        fleets, table, lats, counts, jnp.int32(sched.quantum_cycles),
+        jnp.int32(sched.handler_cycles), s_max, bs_cache_entries,
+        jnp.int32(bs_miss_extra), total_steps)
+
+
+# --- pair path: the P=2 special case, kept as thin wrappers so the Fig. 7
+# --- numbers stay reproducible bit-for-bit through the fleet machinery
 
 
 def simulate_pair(traces: np.ndarray, cfg: ReconfigConfig,
                   scenario: isa.SlotScenario, sched: SchedulerConfig,
                   total_steps: int = 400_000) -> PairResult:
-    return _simulate_pair(
-        jnp.asarray(traces, jnp.int32), scenario.instr_tag,
-        jnp.int32(cfg.miss_latency), jnp.int32(sched.quantum_cycles),
-        jnp.int32(sched.handler_cycles), cfg.num_slots,
-        cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra), total_steps)
+    r = simulate_many(traces, cfg, scenario, sched, total_steps)
+    return PairResult(r.cycles, r.instructions, r.slot_misses, r.switches)
 
 
 def simulate_pair_batch(traces: np.ndarray, cfg: ReconfigConfig,
                         scenario: isa.SlotScenario, sched: SchedulerConfig,
                         total_steps: int = 400_000) -> PairResult:
-    """traces: (B, P, N) — vmap over pair lanes."""
-    fn = jax.vmap(
-        lambda t: _simulate_pair(
-            t, scenario.instr_tag, jnp.int32(cfg.miss_latency),
-            jnp.int32(sched.quantum_cycles), jnp.int32(sched.handler_cycles),
-            cfg.num_slots, cfg.bs_cache_entries,
-            jnp.int32(cfg.bs_miss_extra), total_steps))
-    return fn(jnp.asarray(traces, jnp.int32))
+    """traces: (B, P, N) — one-cell sweep over the pair lanes."""
+    r = sweep_fleet(
+        jnp.asarray(traces, jnp.int32), [cfg.miss_latency], scenario, sched,
+        slot_counts=[cfg.num_slots], bs_cache_entries=cfg.bs_cache_entries,
+        bs_miss_extra=cfg.bs_miss_extra, total_steps=total_steps)
+    # squeeze the singleton slot-count / latency axes -> (B, P) like before
+    return PairResult(r.cycles[:, 0, 0], r.instructions[:, 0, 0],
+                      r.slot_misses[:, 0, 0], r.switches[:, 0, 0])
 
 
 # ---------------------------------------------------------------------------
@@ -239,12 +349,18 @@ def simulate_pair_batch(traces: np.ndarray, cfg: ReconfigConfig,
 # ---------------------------------------------------------------------------
 
 
-def fixed_pair_cpi(mix: Mix, spec: isa.Spec, sched: SchedulerConfig) -> float:
-    """CPI of a fixed-ISA machine inside a round-robin pair.
+def fixed_fleet_cpi(mix: Mix, spec: isa.Spec, sched: SchedulerConfig) -> float:
+    """CPI of a fixed-ISA machine inside a round-robin fleet (any P).
 
     The handler executes `handler_cycles` of base instructions once per
     quantum; amortised per original instruction that is
-    handler * CPI / quantum.
+    handler * CPI / quantum — independent of how many programs share the
+    core, since every program pays it once per own quantum.
     """
     cpi = analytic_cpi(mix, spec)
     return cpi * (1.0 + sched.handler_cycles / sched.quantum_cycles)
+
+
+# historical name from the pair-only simulator; the formula never depended
+# on the fleet size, so the P=2 name is just an alias now
+fixed_pair_cpi = fixed_fleet_cpi

@@ -55,20 +55,34 @@ class LookupResult(NamedTuple):
     evicted_tag: jnp.ndarray  # () int32 — tag displaced on a fill, else -1
 
 
-def lookup(state: SlotState, tag: jnp.ndarray) -> LookupResult:
+def lookup(state: SlotState, tag: jnp.ndarray,
+           num_active: jnp.ndarray | None = None) -> LookupResult:
     """Access `tag`; fill the LRU victim on a miss.  tag == -1 is unslotted
     (a hardwired base instruction) and leaves the state untouched but still
-    reports hit=True so callers charge no reconfiguration latency."""
+    reports hit=True so callers charge no reconfiguration latency.
+
+    `num_active` (optional, traced) restricts the cache to the first
+    `num_active` slots: inactive slots never match and are never victims,
+    which makes the state behave exactly like an LRU cache of that size.
+    This turns the slot *count* — normally a static shape — into a sweepable
+    runtime value: allocate the max size once, `vmap` over `num_active`.
+    """
     tag = jnp.asarray(tag, jnp.int32)
     unslotted = tag < 0
 
     matches = state.tags == tag
+    if num_active is not None:
+        in_active = (jnp.arange(state.tags.shape[0], dtype=jnp.int32)
+                     < jnp.asarray(num_active, jnp.int32))
+        matches = matches & in_active
     hit_any = jnp.any(matches) & ~unslotted
     hit_slot = jnp.argmax(matches).astype(jnp.int32)
 
     # LRU victim: prefer empty slots (their last_use is forced to int32 min)
     empties = state.tags == EMPTY
     use_key = jnp.where(empties, jnp.iinfo(jnp.int32).min, state.last_use)
+    if num_active is not None:
+        use_key = jnp.where(in_active, use_key, jnp.iinfo(jnp.int32).max)
     victim = jnp.argmin(use_key).astype(jnp.int32)
 
     slot = jnp.where(hit_any, hit_slot, victim)

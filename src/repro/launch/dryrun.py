@@ -135,7 +135,7 @@ def hbm_budget(arch: str, shape: str, chips: int) -> dict:
 
 
 def analyse(lowered, compiled, meta, chips: int) -> dict:
-    cost = compiled.cost_analysis()
+    cost = hlo.xla_cost_analysis(compiled)  # list-vs-dict across jax pins
     mem = compiled.memory_analysis()
     # XLA's cost_analysis counts scan bodies once (not x trip count) — the
     # graph walker in repro.analysis.hlo applies while-loop multipliers

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import expert_slots as es
+from repro.core import isa, simulator
+from repro.core import traces as core_traces
 from repro.models import transformer
 
 
@@ -143,6 +145,20 @@ class SlotServeEngine:
         self._account(loads)
 
     # ------------------------------------------------------------------
+    def fleet_contention(self, tenant_benches: dict[str, str],
+                         **kw) -> dict:
+        """Slot-contention estimate for this engine's tenant set.
+
+        `tenant_benches` maps tenant name -> instruction-mix profile
+        (benchmark name).  Slot count defaults to the engine's
+        `slots_per_shard`; everything else forwards to
+        `estimate_fleet_contention`.
+        """
+        benches = [tenant_benches[t.name] for t in self.tenants]
+        kw.setdefault("num_slots", self.ecfg.slots_per_shard)
+        return estimate_fleet_contention(benches, **kw)
+
+    # ------------------------------------------------------------------
     def run(self, total_steps: int) -> dict:
         ti = 0
         quantum_left = self.ecfg.quantum_tokens
@@ -166,6 +182,77 @@ class SlotServeEngine:
             "overhead_frac": s["fill_seconds"] /
             max(compute_s + s["fill_seconds"], 1e-12),
         }
+
+
+def estimate_fleet_contention(benches: list[str], *, num_slots: int = 4,
+                              miss_latency: int = 50,
+                              quantum_cycles: int = 20_000,
+                              handler_cycles: int = 150,
+                              scenarios=None,
+                              trace_len: int = 60_000,
+                              total_steps: int = 160_000) -> dict:
+    """Multi-tenant slot-contention estimate from the core fleet simulator.
+
+    Maps each tenant to an instruction-mix profile (a benchmark name from
+    `repro.core.traces`) and runs the SAME `simulate_many` machinery that
+    produces the paper's Fig. 7 numbers: one reconfigurable core, round-robin
+    quantum, slot state persisting across switches.  Per tenant it reports
+    the fleet CPI, the solo (unpreempted) CPI, and their ratio — the
+    contention slowdown a tenant should expect from co-residency — plus
+    fleet-level switch/miss counters.
+
+    `scenarios` may be one `SlotScenario` or a per-tenant list (tenants can
+    disagree about which opcodes are slotted).
+    """
+    if scenarios is None:
+        scenarios = isa.SCENARIO_2
+    cfg = simulator.ReconfigConfig(num_slots=num_slots,
+                                   miss_latency=miss_latency)
+    sched = simulator.SchedulerConfig(quantum_cycles=quantum_cycles,
+                                      handler_cycles=handler_cycles)
+    tr = np.stack([core_traces.build_trace(n, trace_len) for n in benches])
+    fleet = simulator.simulate_many(tr, cfg, scenarios, sched, total_steps)
+
+    # solo reference: each tenant alone on the core, never preempted
+    solo_sched = simulator.SchedulerConfig.no_preempt(handler_cycles)
+    if isinstance(scenarios, (list, tuple)):
+        # per-tenant taxonomies: one P=1 run per distinct (bench, scenario)
+        solo_cpis = [
+            float(np.asarray(simulator.simulate_many(
+                tr[i:i + 1], cfg, s, solo_sched,
+                total_steps=trace_len).cpi)[0])
+            for i, s in enumerate(scenarios)]
+    else:
+        # shared taxonomy: all P solo runs as one batched sweep cell
+        solo = simulator.sweep_fleet(
+            tr[:, None, :], [miss_latency], scenarios, solo_sched,
+            slot_counts=[num_slots], total_steps=trace_len)
+        solo_cpis = [float(c) for c in np.asarray(solo.cpi)[:, 0, 0, 0]]
+    per_tenant = {}
+    fleet_cpi = np.asarray(fleet.cpi)
+    fleet_instrs = np.asarray(fleet.instructions)
+    for i, name in enumerate(benches):
+        solo_cpi = solo_cpis[i]
+        # a tenant the round-robin never reached (total_steps exhausted
+        # inside earlier quanta) has no CPI — report NaN, not the
+        # "zero slowdown" that a 0/instructions division would fake
+        scheduled = int(fleet_instrs[i]) > 0
+        cpi_i = float(fleet_cpi[i]) if scheduled else float("nan")
+        per_tenant[f"{i}:{name}"] = {
+            "fleet_cpi": cpi_i,
+            "solo_cpi": solo_cpi,
+            "contention_slowdown": cpi_i / solo_cpi,
+            "slot_misses": int(np.asarray(fleet.slot_misses)[i]),
+            "scheduled": scheduled,
+        }
+    return {
+        "tenants": per_tenant,
+        "switches": int(fleet.switches),
+        "total_slot_misses": int(np.asarray(fleet.slot_misses).sum()),
+        "num_slots": num_slots,
+        "miss_latency": miss_latency,
+        "quantum_cycles": quantum_cycles,
+    }
 
 
 def model_batcher(cfg, params, batch_size: int, max_len: int, shd=None):

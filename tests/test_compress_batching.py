@@ -48,7 +48,10 @@ def test_cross_pod_compressed_mean():
     res = subprocess.run(
         [sys.executable, "-c", COMPRESS_SCRIPT],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        # JAX_PLATFORMS=cpu: without it a stripped env lets an installed
+        # TPU plugin probe (and retry) cloud instance metadata for minutes
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
     assert "COMPRESS_OK" in res.stdout, res.stderr[-2000:]
 
 

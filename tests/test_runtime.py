@@ -197,11 +197,14 @@ def test_grad_clipping_bounds_update():
 
 def test_train_driver_loss_decreases(tmp_path):
     from repro.launch import train as train_mod
-    report = train_mod.run("musicgen-medium", smoke=True, steps=30,
+    # 50 steps: the smoke run trains on random embeds, so the learnable
+    # signal is the label marginals — 30 steps leaves the mean decrease
+    # right at the 0.1 threshold on the pinned jax
+    report = train_mod.run("musicgen-medium", smoke=True, steps=50,
                            batch=4, seq=32, ckpt_dir=str(tmp_path),
                            ckpt_every=10, log_every=0)
     losses = report["losses"]
-    assert report["final_step"] == 30
+    assert report["final_step"] == 50
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
 
 
