@@ -5,8 +5,13 @@ fixed-extension reference series).
 
 Runs through `simulator.sweep_fleet` as P=1 fleets with a quantum no run
 can reach (a single program is never preempted), so the whole
-{5 benchmarks x 3 latencies} grid per scenario is one jitted call — the
-same machinery as the Fig. 7 multi-program sweeps.
+{5 benchmarks x 3 latencies} grid per scenario is one call — the same
+machinery as the Fig. 7 multi-program sweeps.  Being unpreempted with a
+warm bitstream cache, the grid is eligible for the stack-distance fast
+path: the dispatcher serves every {slot count x latency} cell from one
+Mattson pass per benchmark (see `repro.core.stackdist`), bit-for-bit equal
+to the scan (tests/test_stackdist.py pins the parity and the paper
+anchors).
 """
 from __future__ import annotations
 

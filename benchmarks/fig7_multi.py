@@ -84,7 +84,13 @@ def run(pairs=None) -> tuple[list[str], dict]:
 
 def run_fleets(k: int = FLEET_K, max_fleets: int | None = 24,
                quantum: int = 20_000) -> tuple[list[str], dict]:
-    """Beyond-paper: k-way fleets x miss-latency grid, one jitted call."""
+    """Beyond-paper: k-way fleets x miss-latency grid, one jitted call.
+
+    Also emits per-benchmark *solo references* — each program alone on the
+    core, unpreempted, same latency grid — and the per-fleet contention
+    slowdown against them.  The solo columns are unpreempted + warm-cache,
+    so the sweep dispatcher serves them from one stack-distance pass per
+    benchmark instead of K x L scans."""
     fleets = scheduler.make_fleets(k)
     if max_fleets is not None:
         fleets = fleets[:max_fleets]
@@ -94,22 +100,41 @@ def run_fleets(k: int = FLEET_K, max_fleets: int | None = 24,
         tensor, FLEET_LATENCIES, isa.SCENARIO_2, sched,
         slot_counts=(4,), total_steps=FLEET_TOTAL_STEPS)
     cpis = np.asarray(res.cpi)              # (B, 1, L, k)
-    rows = [f"fleet,latency,avg_speedup_vs_IMF (P={k}, 4 slots, "
-            f"quantum {quantum})"]
+    rows = [f"fleet,latency,avg_speedup_vs_IMF,avg_contention_vs_solo "
+            f"(P={k}, 4 slots, quantum {quantum})"]
     agg: dict = {}
+    benches = sorted({n for f in fleets for n in f})
     refs = {n: simulator.fixed_fleet_cpi(traces.mix_of(n), isa.RV32IMF,
                                          sched)
-            for n in {n for f in fleets for n in f}}
+            for n in benches}
+    # solo-reference columns: (B=|benches|, P=1) unpreempted sweep over the
+    # same latency grid — stack-distance fast path, no scans
+    solo = simulator.sweep_fleet(
+        np.stack([traces.build_trace(n, TRACE_LEN) for n in benches])[
+            :, None, :],
+        FLEET_LATENCIES, isa.SCENARIO_2, simulator.SchedulerConfig.no_preempt(),
+        slot_counts=(4,), total_steps=TRACE_LEN)
+    solo_cpi = {n: np.asarray(solo.cpi)[bi, 0, :, 0]
+                for bi, n in enumerate(benches)}
     for li, lat in enumerate(FLEET_LATENCIES):
+        for n in benches:
+            # unpreempted solo vs plain analytic IMF (no handler term) —
+            # the same quantity fig6_single reports for these cells
+            imf = simulator.analytic_cpi(traces.mix_of(n), isa.RV32IMF)
+            rows.append(f"solo:{n},{lat},"
+                        f"{imf / solo_cpi[n][li]:.3f},1.00x")
         for i, fleet in enumerate(fleets):
             sp = float(np.mean([refs[n] / cpis[i, 0, li, j]
                                 for j, n in enumerate(fleet)]))
+            slowdown = float(np.mean([cpis[i, 0, li, j] / solo_cpi[n][li]
+                                      for j, n in enumerate(fleet)]))
             agg.setdefault(lat, []).append(sp)
-            rows.append(f"{'+'.join(fleet)},{lat},{sp:.3f}")
+            rows.append(f"{'+'.join(fleet)},{lat},{sp:.3f},{slowdown:.2f}x")
     for lat, vals in sorted(agg.items()):
-        rows.append(f"AVERAGE,{lat},{np.mean(vals):.3f}")
+        rows.append(f"AVERAGE,{lat},{np.mean(vals):.3f},-")
     rows.append(f"# {len(fleets)} fleets of {k}; slot competition grows "
-                "with P at fixed slot count (avg falls with latency)")
+                "with P at fixed slot count (avg falls with latency); "
+                "contention = fleet CPI / unpreempted solo CPI")
     return rows, agg
 
 

@@ -1,0 +1,258 @@
+"""§Perf — sweep-engine wall-clock, PR 2's two claims measured head-to-head.
+
+1. **Stack-distance fast path vs the `lax.scan` path** on the Fig. 6 grid
+   ({3 scenarios x 3 miss latencies x 5 FM benchmarks}, the paper's §V-D
+   axis): the scan pays one 120k-step LRU state machine per {slot count x
+   latency} lane, the fast path one Mattson pass per benchmark with the
+   grid reconstructed affinely (`repro.core.stackdist`).  Both are run to
+   completion and asserted bit-for-bit equal before timing is reported.
+
+2. **Optimized preempted scan vs the PR-1 step** on a P=4 round-robin
+   fleet: the PR-1 implementation (dependent double gather per step, two
+   separate `slots.lookup` calls, no unroll) is frozen below as
+   `_legacy_simulate_fleet` so the gather-hoist + fused-lookup win stays
+   measurable after the live code moves on; a `scan_unroll` sweep records
+   where unrolling pays on this backend.
+
+Emits machine-readable `BENCH_sweep.json` at the repo root so the perf
+trajectory is tracked PR-over-PR, and a CSV under experiments/bench via
+benchmarks.run.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa, scheduler, simulator, slots, traces
+
+FIG6_TRACE_LEN = 120_000          # matches benchmarks/fig6_single.py
+FIG6_LATENCIES = (10, 50, 250)
+FIG6_SCENARIOS = (("s1", isa.SCENARIO_1), ("s2", isa.SCENARIO_2),
+                  ("s3", isa.SCENARIO_3))
+
+P4_FLEETS = 6
+P4_TRACE_LEN = 30_000
+P4_TOTAL_STEPS = 60_000
+P4_QUANTUM = 20_000
+# always include the live default so retuning SCAN_UNROLL keeps the sweep
+# (and the optimized_s lookup below) well-defined
+UNROLLS = tuple(sorted({1, 2, 4, 8, simulator.SCAN_UNROLL}))
+REPS = 2
+
+# BENCH_sweep.json lives at the repo root (not the cwd), next to
+# BENCH_fleet.json, so the perf trajectory is diffable PR-over-PR
+SWEEP_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_sweep.json")
+
+
+def _best_of(fn, reps: int = REPS) -> float:
+    """Compile/warm once, then best-of-`reps` wall-clock seconds."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# 1. fig6 grid: fast path vs scan path
+# ---------------------------------------------------------------------------
+
+
+def _fig6_grid(fleet, path: str):
+    out = []
+    for _, scen in FIG6_SCENARIOS:
+        out.append(simulator.sweep_fleet(
+            fleet, FIG6_LATENCIES, scen, simulator.SchedulerConfig.no_preempt(),
+            slot_counts=(scen.num_slots,), total_steps=FIG6_TRACE_LEN,
+            path=path))
+    return out
+
+
+def bench_fig6_grid() -> dict:
+    fleet = np.stack([traces.build_trace(n, FIG6_TRACE_LEN)
+                      for n in traces.FM_BENCHES])[:, None, :]
+    # correctness first: the two engines must agree bit-for-bit
+    for scan_r, fast_r in zip(_fig6_grid(fleet, "scan"),
+                              _fig6_grid(fleet, "stackdist")):
+        for a, b in zip(scan_r, fast_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    scan_s = _best_of(lambda: _fig6_grid(fleet, "scan"))
+    fast_s = _best_of(lambda: _fig6_grid(fleet, "stackdist"))
+    return {
+        "grid": f"{len(FIG6_SCENARIOS)} scenarios x {len(FIG6_LATENCIES)} "
+                f"latencies x {fleet.shape[0]} benches @ {FIG6_TRACE_LEN} steps",
+        "scan_s": scan_s,
+        "stackdist_s": fast_s,
+        "speedup": scan_s / fast_s,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2. preempted P=4 fleet: PR-1 step (frozen) vs optimized scan
+# ---------------------------------------------------------------------------
+
+
+def _legacy_simulate_fleet_impl(trs, tag_table, miss_latency, active_slots,
+                                quantum, handler, num_slots: int,
+                                bs_entries: int, bs_miss_extra,
+                                total_steps: int):
+    """The PR-1 fleet scan, frozen verbatim as the perf baseline: per-step
+    dependent double gather (trace -> instr -> tag/hw) and two separate
+    `slots.lookup` calls, unroll=1."""
+    hw = jnp.asarray(isa.INSTR_HW_CYCLES, jnp.int32)
+    tags = jnp.asarray(tag_table, jnp.int32)
+    num_progs, trace_len = trs.shape
+
+    def step(c, _):
+        p = c["active"]
+        ins = trs[p, jnp.remainder(c["cursors"][p], trace_len)]
+        tag = tags[p, ins]
+        res = slots.lookup(c["slot_st"], tag, active_slots)
+        bs_res = slots.lookup(
+            c["bs_st"], jnp.where(res.hit, jnp.int32(-1), tag))
+        cost = hw[ins]
+        cost = cost + jnp.where(res.hit, 0, miss_latency).astype(jnp.int32)
+        cost = cost + jnp.where(res.hit | bs_res.hit, 0,
+                                bs_miss_extra).astype(jnp.int32)
+        q = c["q_cycles"] + cost
+        do_switch = q >= quantum
+        cost_p = cost + jnp.where(do_switch, handler, 0).astype(jnp.int32)
+        return {
+            "slot_st": res.state,
+            "bs_st": bs_res.state,
+            "cursors": c["cursors"].at[p].add(1),
+            "active": jnp.where(do_switch, (p + 1) % num_progs, p),
+            "q_cycles": jnp.where(do_switch, 0, q),
+            "cycles": c["cycles"].at[p].add(cost_p),
+            "instrs": c["instrs"].at[p].add(1),
+            "misses": c["misses"].at[p].add((~res.hit).astype(jnp.int32)),
+            "bs_misses": c["bs_misses"].at[p].add(
+                (~(res.hit | bs_res.hit)).astype(jnp.int32)),
+            "switches": c["switches"] + do_switch.astype(jnp.int32),
+        }, None
+
+    init = {
+        "slot_st": slots.init(num_slots),
+        "bs_st": slots.init(bs_entries),
+        "cursors": jnp.zeros((num_progs,), jnp.int32),
+        "active": jnp.int32(0),
+        "q_cycles": jnp.int32(0),
+        "cycles": jnp.zeros((num_progs,), jnp.int32),
+        "instrs": jnp.zeros((num_progs,), jnp.int32),
+        "misses": jnp.zeros((num_progs,), jnp.int32),
+        "bs_misses": jnp.zeros((num_progs,), jnp.int32),
+        "switches": jnp.int32(0),
+    }
+    final, _ = jax.lax.scan(step, init, None, length=total_steps)
+    return simulator.FleetResult(
+        final["cycles"], final["instrs"], final["misses"],
+        final["bs_misses"], final["switches"])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps"))
+def _legacy_sweep(fleets, tag_table, miss_latencies, slot_counts, quantum,
+                  handler, num_slots: int, bs_entries: int, bs_miss_extra,
+                  total_steps: int):
+    def one(t, s, lat):
+        return _legacy_simulate_fleet_impl(
+            t, tag_table, lat, s, quantum, handler, num_slots, bs_entries,
+            bs_miss_extra, total_steps)
+
+    f = jax.vmap(one, in_axes=(None, None, 0))
+    f = jax.vmap(f, in_axes=(None, 0, None))
+    f = jax.vmap(f, in_axes=(0, None, None))
+    return f(fleets, slot_counts, miss_latencies)
+
+
+def bench_p4_preempted() -> dict:
+    tensor = jnp.asarray(scheduler.fleet_traces(
+        scheduler.make_fleets(4)[:P4_FLEETS], P4_TRACE_LEN), jnp.int32)
+    table = simulator.fleet_tag_table(isa.SCENARIO_2, 4)
+    sched = simulator.SchedulerConfig(quantum_cycles=P4_QUANTUM)
+
+    def legacy():
+        return _legacy_sweep(
+            tensor, table, jnp.asarray([50], jnp.int32),
+            jnp.asarray([4], jnp.int32), jnp.int32(P4_QUANTUM),
+            jnp.int32(sched.handler_cycles), 4, 64, jnp.int32(100),
+            P4_TOTAL_STEPS)
+
+    def optimized(unroll):
+        return simulator.sweep_fleet(
+            tensor, [50], isa.SCENARIO_2, sched, slot_counts=[4],
+            total_steps=P4_TOTAL_STEPS, path="scan", scan_unroll=unroll)
+
+    # the optimized step must reproduce the PR-1 numbers exactly
+    np.testing.assert_array_equal(
+        np.asarray(legacy().cycles),
+        np.asarray(optimized(simulator.SCAN_UNROLL).cycles))
+
+    legacy_s = _best_of(legacy)
+    unroll_sweep = {str(u): _best_of(lambda u=u: optimized(u))
+                    for u in UNROLLS}
+    optimized_s = unroll_sweep[str(simulator.SCAN_UNROLL)]
+    return {
+        "grid": f"{P4_FLEETS} fleets x P=4 x {P4_TOTAL_STEPS} steps, "
+                f"quantum {P4_QUANTUM}, 50c misses",
+        "legacy_s": legacy_s,
+        "optimized_s": optimized_s,
+        "speedup": legacy_s / optimized_s,
+        "default_unroll": simulator.SCAN_UNROLL,
+        "unroll_sweep_s": unroll_sweep,
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def run() -> tuple[list[str], dict]:
+    report = {
+        "fig6_grid": bench_fig6_grid(),
+        "p4_preempted": bench_p4_preempted(),
+        "meta": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "machine": platform.machine(),
+            "reps": REPS,
+        },
+    }
+    with open(SWEEP_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    g, p = report["fig6_grid"], report["p4_preempted"]
+    rows = [
+        "section,variant,seconds,speedup",
+        f"fig6_grid,scan,{g['scan_s']:.3f},1.00x",
+        f"fig6_grid,stackdist,{g['stackdist_s']:.3f},{g['speedup']:.1f}x",
+        f"p4_preempted,legacy_pr1,{p['legacy_s']:.3f},1.00x",
+        f"p4_preempted,optimized,{p['optimized_s']:.3f},{p['speedup']:.2f}x",
+    ]
+    rows += [f"p4_preempted,unroll={u},{s:.3f},-"
+             for u, s in p["unroll_sweep_s"].items()]
+    rows.append(f"# fast path {g['speedup']:.1f}x on the fig6 grid; "
+                f"optimized scan {p['speedup']:.2f}x on the preempted P=4 "
+                "fleet; BENCH_sweep.json written")
+    return rows, report
+
+
+def main(print_fn=print):
+    t0 = time.time()
+    rows, _ = run()
+    for r in rows:
+        print_fn(r)
+    print_fn(f"# perf_sweep done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

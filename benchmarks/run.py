@@ -1,15 +1,25 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (one row per benchmark module) and
-writes each module's full output under experiments/bench/.
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark module),
+writes each module's full output under experiments/bench/, and records the
+same {us_per_call, derived} per module in ``BENCH_fleet.json`` at the repo
+root — the machine-readable perf trajectory CI uploads per PR.  Partial
+runs (``--only``) merge into the existing JSON instead of clobbering it.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig6]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
+
+# anchored to the repo root (not the cwd) so partial runs always merge into
+# the same file CI uploads
+FLEET_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_fleet.json")
 
 
 def _capture(mod_main):
@@ -80,6 +90,14 @@ def bench_roofline():
     return lines, f"{len(lines) - 1} dry-run cells tabulated"
 
 
+def bench_perf_sweep():
+    """Sweep-engine wall-clock: stack-distance vs scan (+ BENCH_sweep.json)."""
+    from benchmarks import perf_sweep
+    lines, _ = perf_sweep.run()
+    head = [l for l in lines if l.startswith("# fast path")][0]
+    return lines, head[2:]
+
+
 BENCHES = {
     "fig4_extensions": bench_fig4,
     "fig5_classification": bench_fig5,
@@ -90,7 +108,23 @@ BENCHES = {
     "bitstream_study": bench_bitstream_study,
     "perf_slot_decode": bench_perf_slot_decode,
     "roofline_table": bench_roofline,
+    "perf_sweep": bench_perf_sweep,
 }
+
+
+def _record_fleet_json(results: dict) -> None:
+    """Merge this run's {bench: {us_per_call, derived}} into BENCH_fleet.json
+    at the repo root, preserving entries for modules not run this time."""
+    existing: dict = {}
+    if os.path.exists(FLEET_JSON):
+        try:
+            with open(FLEET_JSON) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = {}
+    existing.update(results)
+    with open(FLEET_JSON, "w") as f:
+        json.dump(existing, f, indent=2)
 
 
 def main() -> None:
@@ -99,6 +133,7 @@ def main() -> None:
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
+    results: dict = {}
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and args.only not in name:
@@ -109,7 +144,10 @@ def main() -> None:
         with open(os.path.join(args.out, f"{name}.csv"), "w") as f:
             f.write("\n".join(lines) + "\n")
         derived = str(derived).replace(",", ";")
+        results[name] = {"us_per_call": round(us), "derived": derived}
         print(f"{name},{us:.0f},{derived}", flush=True)
+    if results:
+        _record_fleet_json(results)
 
 
 if __name__ == "__main__":

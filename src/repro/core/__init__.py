@@ -4,5 +4,6 @@ architecture, as (a) a faithful cycle-approximate simulation stack
 adaptation, slot-resident expert serving (expert_slots).  See DESIGN.md §2.
 """
 from repro.core import (  # noqa: F401
-    bitstream, expert_slots, isa, scheduler, simulator, slots, traces,
+    bitstream, expert_slots, isa, scheduler, simulator, slots, stackdist,
+    traces,
 )

@@ -19,6 +19,28 @@ stay resident, §IV).  The scheduler runs over arbitrary fleets of P programs
 and `sweep_fleet` crosses {fleets x slot counts x miss latencies} in one
 jitted vmap^3 — slot counts sweep dynamically by masking a max-size
 disambiguator.  The paper's pair experiments are the P=2 special case.
+
+Two execution paths serve the sweep entry points (`sweep_fleet`,
+`simulate_single`, `simulate_single_batch`); a dispatcher picks per call:
+
+  * **stack-distance fast path** (`repro.core.stackdist`): one Mattson pass
+    per trace yields exact miss counts for every slot count at once, and
+    cycles reconstruct affinely per miss latency — the {slot count x
+    latency} grid collapses into post-processing.  Exact (bit-for-bit equal
+    to the scan) iff the run is *unpreempted* (the quantum exceeds any
+    reachable cycle count, so only program 0 runs and trace order is
+    latency-independent) and the bitstream cache is *warm* (entries >=
+    distinct tags, so it never evicts).  `stackdist_eligible` encodes both
+    rules plus the no-overflow guard.
+  * **`lax.scan` path**: the general cycle-by-cycle round-robin machine,
+    used for preempted fleets and cold bitstream caches.  Its hot loop
+    pre-gathers the per-program (tag, hw-cost) streams once per call
+    (instead of a dependent double gather per step), fuses the
+    disambiguator + bitstream lookups into one state update
+    (`slots.lookup_fused`), and unrolls the scan body (`scan_unroll`).
+
+Callers can force a path with `path="scan"`/`"stackdist"` (parity tests do);
+the default `"auto"` routes eligible sweeps through stack distance.
 """
 from __future__ import annotations
 
@@ -30,17 +52,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import isa, slots
+from repro.core import isa, slots, stackdist
 from repro.core.traces import Mix, analytic_cpi  # re-export for callers
 
 __all__ = [
     "ReconfigConfig", "SchedulerConfig", "SimResult", "PairResult",
-    "FleetResult", "fleet_tag_table",
+    "FleetResult", "fleet_tag_table", "stackdist_eligible",
     "simulate_single", "simulate_single_batch",
     "simulate_many", "sweep_fleet",
     "simulate_pair", "simulate_pair_batch",
     "analytic_cpi", "fixed_pair_cpi", "fixed_fleet_cpi",
 ]
+
+# default lax.scan unroll for the cycle-by-cycle path — exposed so callers
+# (and benchmarks/perf_sweep.py, which sweeps it) can tune per backend
+# without changing results (integer state updates are exact).  Tuned on CPU:
+# un-vmapped scans gain ~10% at unroll=4, but the vmap^3 sweep loses badly
+# to the duplicated loop body, so the shared default stays 1; accelerators
+# with per-step dispatch overhead are where larger unrolls pay off.
+SCAN_UNROLL = 1
 
 
 @dataclass(frozen=True)
@@ -101,6 +131,43 @@ class PairResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
+def stackdist_eligible(tag_row, *, quantum_cycles: int, bs_entries: int,
+                       max_miss_latency: int, bs_miss_extra: int,
+                       total_steps: int) -> bool:
+    """True iff the stack-distance fast path is *exact* for this run.
+
+    Three conditions (see module docstring and `repro.core.stackdist`):
+
+    1. warm bitstream cache: `bs_entries` covers every distinct tag of the
+       scheduled program (`tag_row` is program 0's instr->tag table), so the
+       bitstream cache never evicts and each tag misses it exactly once;
+    2. unpreempted: the quantum is the NO_PREEMPT sentinel or beyond, so
+       trace order is latency-independent and no handler cycles accrue;
+    3. no-overflow guard: even the worst-case per-step cost summed over
+       `total_steps` stays below the quantum — the scan's q_cycles
+       accumulator can provably never fire a switch (and int32 stays safe).
+    """
+    num_tags = int(np.max(tag_row)) + 1
+    warm = bs_entries >= num_tags
+    worst_step = (int(np.max(isa.INSTR_HW_CYCLES)) + int(max_miss_latency)
+                  + int(bs_miss_extra))
+    unpreempted = (quantum_cycles >= NO_PREEMPT_QUANTUM
+                   and total_steps * worst_step < quantum_cycles)
+    return warm and unpreempted
+
+
+def _check_path(path: str, eligible: bool) -> str:
+    if path not in ("auto", "stackdist", "scan"):
+        raise ValueError(f"unknown path {path!r}")
+    if path == "stackdist" and not eligible:
+        raise ValueError(
+            "stack-distance path requires an unpreempted run with a warm "
+            "bitstream cache (see simulator.stackdist_eligible)")
+    if path == "auto":
+        path = "stackdist" if eligible else "scan"
+    return path
+
+
 def _simulate_single(trace, instr_tag, miss_latency, num_slots: int,
                      bs_entries: int, bs_miss_extra):
     """P=1 special case of the fleet scan: one program, never preempted.
@@ -121,10 +188,30 @@ _simulate_single_jit = functools.partial(
     jax.jit, static_argnames=("num_slots", "bs_entries"))(_simulate_single)
 
 
+def _single_eligible(cfg: ReconfigConfig, scenario: isa.SlotScenario,
+                     max_miss_latency: int, total_steps: int) -> bool:
+    return stackdist_eligible(
+        scenario.instr_tag, quantum_cycles=NO_PREEMPT_QUANTUM,
+        bs_entries=cfg.bs_cache_entries, max_miss_latency=max_miss_latency,
+        bs_miss_extra=cfg.bs_miss_extra, total_steps=total_steps)
+
+
 def simulate_single(trace: np.ndarray, cfg: ReconfigConfig,
-                    scenario: isa.SlotScenario) -> SimResult:
+                    scenario: isa.SlotScenario,
+                    path: str = "auto") -> SimResult:
+    trace = jnp.asarray(trace, jnp.int32)
+    eligible = _single_eligible(cfg, scenario, cfg.miss_latency,
+                                trace.shape[0])
+    if _check_path(path, eligible) == "stackdist":
+        cycles, misses, bs = stackdist.lanes_unpreempted(
+            trace[None, :], scenario.instr_tag, isa.INSTR_HW_CYCLES,
+            jnp.int32(cfg.num_slots), jnp.asarray([cfg.miss_latency]),
+            jnp.int32(cfg.bs_miss_extra),
+            num_tags=max(scenario.num_tags, 1), total_steps=trace.shape[0])
+        return SimResult(cycles[0], jnp.int32(trace.shape[0]), misses[0],
+                         bs[0])
     return _simulate_single_jit(
-        jnp.asarray(trace, jnp.int32),
+        trace,
         jnp.asarray(scenario.instr_tag, jnp.int32),
         jnp.int32(cfg.miss_latency), num_slots=cfg.num_slots,
         bs_entries=cfg.bs_cache_entries,
@@ -133,16 +220,39 @@ def simulate_single(trace: np.ndarray, cfg: ReconfigConfig,
 
 def simulate_single_batch(traces: np.ndarray, miss_latencies: np.ndarray,
                           cfg: ReconfigConfig,
-                          scenario: isa.SlotScenario) -> SimResult:
-    """vmap over (trace, miss latency) lanes with a shared scenario."""
+                          scenario: isa.SlotScenario,
+                          path: str = "auto") -> SimResult:
+    """vmap over (trace, miss latency) lanes with a shared scenario.
+
+    Eligible lanes (warm bitstream cache — a single program is never
+    preempted) route through one stack-distance profile per lane instead of
+    one `lax.scan` per lane."""
+    traces = jnp.asarray(traces, jnp.int32)
+    lats = jnp.asarray(miss_latencies, jnp.int32)
+    eligible = _single_eligible(cfg, scenario,
+                                int(np.max(np.asarray(miss_latencies))),
+                                traces.shape[-1])
+    if _check_path(path, eligible) == "stackdist":
+        chunk = _stackdist_chunk(traces.shape[-1],
+                                 max(scenario.num_tags, 1))
+        outs = [
+            stackdist.lanes_unpreempted(
+                traces[i:i + chunk], scenario.instr_tag,
+                isa.INSTR_HW_CYCLES, jnp.int32(cfg.num_slots),
+                lats[i:i + chunk], jnp.int32(cfg.bs_miss_extra),
+                num_tags=max(scenario.num_tags, 1),
+                total_steps=traces.shape[-1])
+            for i in range(0, traces.shape[0], chunk)]
+        cycles, misses, bs = (jnp.concatenate(x) for x in zip(*outs))
+        instrs = jnp.full(cycles.shape, traces.shape[-1], jnp.int32)
+        return SimResult(cycles, instrs, misses, bs)
     tag = jnp.asarray(scenario.instr_tag, jnp.int32)
     fn = jax.vmap(
         lambda t, L: _simulate_single_jit(
             t, tag, L, num_slots=cfg.num_slots,
             bs_entries=cfg.bs_cache_entries,
             bs_miss_extra=jnp.int32(cfg.bs_miss_extra)))
-    return fn(jnp.asarray(traces, jnp.int32),
-              jnp.asarray(miss_latencies, jnp.int32))
+    return fn(traces, lats)
 
 
 # ---------------------------------------------------------------------------
@@ -185,23 +295,28 @@ def fleet_tag_table(scenarios, num_programs: int) -> np.ndarray:
     return np.stack([s.instr_tag for s in scenarios])
 
 
-def _fleet_step_fn(traces, tags, hw, miss_latency, active_slots, quantum,
+def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quantum,
                    handler, bs_miss_extra):
-    """Round-robin step over a (P, N) trace tensor with per-program tags."""
-    num_progs, trace_len = traces.shape
+    """Round-robin step over precomputed per-program (tag, cost) streams.
+
+    `ptags`/`pcosts` are the (P, N) gathers `tags[p, traces[p, i]]` /
+    `hw[traces[p, i]]` hoisted out of the step: the hot loop does two
+    independent stream loads instead of a dependent double gather per cycle,
+    and one fused disambiguator+bitstream update (`slots.lookup_fused`).
+    """
+    num_progs, trace_len = ptags.shape
 
     def step(c, _):
         p = c["active"]
-        ins = traces[p, jnp.remainder(c["cursors"][p], trace_len)]
-        tag = tags[p, ins]
-        res = slots.lookup(c["slot_st"], tag, active_slots)
+        i = jnp.remainder(c["cursors"][p], trace_len)
+        tag = ptags[p, i]
         # on a disambiguator miss the bitstream is fetched through the
         # bitstream cache; a miss there goes to the unified L2 (extra cost)
-        bs_res = slots.lookup(
-            c["bs_st"], jnp.where(res.hit, jnp.int32(-1), tag))
-        cost = hw[ins]
-        cost = cost + jnp.where(res.hit, 0, miss_latency).astype(jnp.int32)
-        cost = cost + jnp.where(res.hit | bs_res.hit, 0,
+        slot_st, bs_st, hit, bs_hit = slots.lookup_fused(
+            c["slot_st"], c["bs_st"], tag, active_slots)
+        cost = pcosts[p, i]
+        cost = cost + jnp.where(hit, 0, miss_latency).astype(jnp.int32)
+        cost = cost + jnp.where(hit | bs_hit, 0,
                                 bs_miss_extra).astype(jnp.int32)
 
         q = c["q_cycles"] + cost
@@ -213,16 +328,16 @@ def _fleet_step_fn(traces, tags, hw, miss_latency, active_slots, quantum,
         # slot/bitstream state deliberately persists across the switch —
         # shared extensions stay resident (the architecture's point, §IV)
         return {
-            "slot_st": res.state,
-            "bs_st": bs_res.state,
+            "slot_st": slot_st,
+            "bs_st": bs_st,
             "cursors": c["cursors"].at[p].add(1),
             "active": jnp.where(do_switch, (p + 1) % num_progs, p),
             "q_cycles": jnp.where(do_switch, 0, q),
             "cycles": c["cycles"].at[p].add(cost_p),
             "instrs": c["instrs"].at[p].add(1),
-            "misses": c["misses"].at[p].add((~res.hit).astype(jnp.int32)),
+            "misses": c["misses"].at[p].add((~hit).astype(jnp.int32)),
             "bs_misses": c["bs_misses"].at[p].add(
-                (~(res.hit | bs_res.hit)).astype(jnp.int32)),
+                (~(hit | bs_hit)).astype(jnp.int32)),
             "switches": c["switches"] + do_switch.astype(jnp.int32),
         }, None
 
@@ -231,7 +346,8 @@ def _fleet_step_fn(traces, tags, hw, miss_latency, active_slots, quantum,
 
 def _simulate_fleet_impl(traces, tag_table, miss_latency, active_slots,
                          quantum, handler, num_slots: int, bs_entries: int,
-                         bs_miss_extra, total_steps: int) -> FleetResult:
+                         bs_miss_extra, total_steps: int,
+                         scan_unroll: int = SCAN_UNROLL) -> FleetResult:
     """(P, N) traces + (P, num_opcodes) tags -> per-program FleetResult.
 
     `num_slots` is the *allocated* (static) disambiguator size;
@@ -240,6 +356,11 @@ def _simulate_fleet_impl(traces, tag_table, miss_latency, active_slots,
     hw = jnp.asarray(isa.INSTR_HW_CYCLES, jnp.int32)
     tags = jnp.asarray(tag_table, jnp.int32)
     num_progs = traces.shape[0]
+    # hoist the per-step dependent double gather: precompute the per-program
+    # tag and hw-cost streams once (the instruction id itself is only ever
+    # used through these two tables)
+    ptags = jnp.take_along_axis(tags, traces, axis=1)
+    pcosts = hw[traces]
 
     init = {
         "slot_st": slots.init(num_slots),
@@ -253,21 +374,23 @@ def _simulate_fleet_impl(traces, tag_table, miss_latency, active_slots,
         "bs_misses": jnp.zeros((num_progs,), jnp.int32),
         "switches": jnp.int32(0),
     }
-    step = _fleet_step_fn(traces, tags, hw, miss_latency, active_slots,
+    step = _fleet_step_fn(ptags, pcosts, miss_latency, active_slots,
                           quantum, handler, bs_miss_extra)
-    final, _ = jax.lax.scan(step, init, None, length=total_steps)
+    final, _ = jax.lax.scan(step, init, None, length=total_steps,
+                            unroll=scan_unroll)
     return FleetResult(final["cycles"], final["instrs"], final["misses"],
                        final["bs_misses"], final["switches"])
 
 
 _simulate_fleet = functools.partial(
-    jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps"))(
-        _simulate_fleet_impl)
+    jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps",
+                              "scan_unroll"))(_simulate_fleet_impl)
 
 
 def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                   scenarios, sched: SchedulerConfig,
-                  total_steps: int = 400_000) -> FleetResult:
+                  total_steps: int = 400_000,
+                  scan_unroll: int = SCAN_UNROLL) -> FleetResult:
     """Round-robin fleet of P programs sharing one reconfigurable core.
 
     traces: (P, N) int32 instruction ids; `scenarios` is one shared
@@ -279,18 +402,20 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
         traces, table, jnp.int32(cfg.miss_latency),
         jnp.int32(cfg.num_slots), jnp.int32(sched.quantum_cycles),
         jnp.int32(sched.handler_cycles), cfg.num_slots,
-        cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra), total_steps)
+        cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra), total_steps,
+        scan_unroll)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps"))
+    jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps",
+                              "scan_unroll"))
 def _sweep_fleet(fleets, tag_table, miss_latencies, slot_counts, quantum,
                  handler, num_slots: int, bs_entries: int, bs_miss_extra,
-                 total_steps: int) -> FleetResult:
+                 total_steps: int, scan_unroll: int) -> FleetResult:
     def one(t, s, lat):
         return _simulate_fleet_impl(
             t, tag_table, lat, s, quantum, handler, num_slots, bs_entries,
-            bs_miss_extra, total_steps)
+            bs_miss_extra, total_steps, scan_unroll)
 
     f = jax.vmap(one, in_axes=(None, None, 0))   # miss-latency axis
     f = jax.vmap(f, in_axes=(None, 0, None))     # slot-count axis
@@ -298,26 +423,85 @@ def _sweep_fleet(fleets, tag_table, miss_latencies, slot_counts, quantum,
     return f(fleets, slot_counts, miss_latencies)
 
 
+# the distance profile materializes (total_steps, num_tags)-shaped int32
+# temporaries per batched lane; cap chunk_size * total_steps * num_tags so
+# the fast path's transient footprint stays bounded (~64 MB per temporary,
+# a few alive at once) no matter how many fleets an eligible sweep batches
+# or how fine the tag taxonomy is
+_STACKDIST_CHUNK_ELEMS = 16_000_000
+
+
+def _stackdist_chunk(total_steps: int, num_tags: int) -> int:
+    return max(1, _STACKDIST_CHUNK_ELEMS
+               // max(total_steps * max(num_tags, 1), 1))
+
+
+def _sweep_fleet_stackdist(fleets, table, lats, counts, bs_miss_extra,
+                           total_steps: int) -> FleetResult:
+    """Assemble the scan-shaped FleetResult from one stack-distance pass.
+
+    Only valid for eligible (unpreempted) runs: program 0 executes every
+    step, programs 1..P-1 never get scheduled (their counters are zero in
+    the scan too), and no switch ever fires.  The fleet axis is processed
+    in memory-bounded chunks (at most two compiled shapes: full + tail).
+    """
+    num_progs = fleets.shape[1]
+    num_tags = max(int(np.max(np.asarray(table[0]))) + 1, 1)
+    chunk = _stackdist_chunk(total_steps, num_tags)
+    grids = [
+        stackdist.sweep_unpreempted(
+            fleets[i:i + chunk, 0, :], table[0], isa.INSTR_HW_CYCLES,
+            counts, lats, jnp.int32(bs_miss_extra), num_tags=num_tags,
+            total_steps=total_steps)
+        for i in range(0, fleets.shape[0], chunk)]
+    cycles = jnp.concatenate([g.cycles for g in grids])
+    slot_misses = jnp.concatenate([g.slot_misses for g in grids])
+    bs_misses = jnp.concatenate([g.bs_misses for g in grids])
+    b, k, l = cycles.shape
+    zeros = jnp.zeros((b, k, l, num_progs), jnp.int32)
+    return FleetResult(
+        cycles=zeros.at[..., 0].set(cycles),
+        instructions=zeros.at[..., 0].set(jnp.int32(total_steps)),
+        slot_misses=zeros.at[..., 0].set(slot_misses[:, :, None]),
+        bs_misses=zeros.at[..., 0].set(bs_misses[:, None, None]),
+        switches=jnp.zeros((b, k, l), jnp.int32),
+    )
+
+
 def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
                 sched: SchedulerConfig, *, slot_counts,
                 bs_cache_entries: int = 64, bs_miss_extra: int = 100,
-                total_steps: int = 400_000) -> FleetResult:
-    """One jitted call over the {fleets x slot counts x miss latencies} grid.
+                total_steps: int = 400_000, path: str = "auto",
+                scan_unroll: int = SCAN_UNROLL) -> FleetResult:
+    """One call over the {fleets x slot counts x miss latencies} grid.
 
-    fleets: (B, P, N) int32 traces.  Slot counts are swept by masking one
-    max-size disambiguator (`slots.lookup`'s `num_active`), so the whole
-    grid — including the slot-count axis, normally a static shape — runs as
-    a single compiled `vmap^3`.  Result axes: (B, K_slots, L_lat, P).
+    fleets: (B, P, N) int32 traces.  Result axes: (B, K_slots, L_lat, P).
+
+    Dispatch (see module docstring): eligible grids — unpreempted, warm
+    bitstream cache (`stackdist_eligible`) — collapse the K x L grid into
+    one stack-distance pass per fleet; everything else runs the jitted
+    vmap^3 of `lax.scan`s, where slot counts sweep by masking one max-size
+    disambiguator (`slots.lookup`'s `num_active`).  `path` forces a
+    specific engine ("stackdist" raises if the grid is ineligible);
+    both return bit-for-bit identical results on eligible grids.
     """
     fleets = jnp.asarray(fleets, jnp.int32)
     table = fleet_tag_table(scenarios, fleets.shape[1])
     counts = jnp.asarray(slot_counts, jnp.int32).reshape(-1)
     lats = jnp.asarray(miss_latencies, jnp.int32).reshape(-1)
+    eligible = stackdist_eligible(
+        table[0], quantum_cycles=sched.quantum_cycles,
+        bs_entries=bs_cache_entries,
+        max_miss_latency=int(np.max(np.asarray(miss_latencies))),
+        bs_miss_extra=bs_miss_extra, total_steps=total_steps)
+    if _check_path(path, eligible) == "stackdist":
+        return _sweep_fleet_stackdist(fleets, table, lats, counts,
+                                      bs_miss_extra, total_steps)
     s_max = int(np.max(np.asarray(slot_counts)))
     return _sweep_fleet(
         fleets, table, lats, counts, jnp.int32(sched.quantum_cycles),
         jnp.int32(sched.handler_cycles), s_max, bs_cache_entries,
-        jnp.int32(bs_miss_extra), total_steps)
+        jnp.int32(bs_miss_extra), total_steps, scan_unroll)
 
 
 # --- pair path: the P=2 special case, kept as thin wrappers so the Fig. 7

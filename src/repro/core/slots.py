@@ -55,17 +55,14 @@ class LookupResult(NamedTuple):
     evicted_tag: jnp.ndarray  # () int32 — tag displaced on a fill, else -1
 
 
-def lookup(state: SlotState, tag: jnp.ndarray,
-           num_active: jnp.ndarray | None = None) -> LookupResult:
-    """Access `tag`; fill the LRU victim on a miss.  tag == -1 is unslotted
-    (a hardwired base instruction) and leaves the state untouched but still
-    reports hit=True so callers charge no reconfiguration latency.
+def _access(state: SlotState, tag: jnp.ndarray,
+            num_active: jnp.ndarray | None = None):
+    """Shared LRU core: hit-test + victim fill, one implementation.
 
-    `num_active` (optional, traced) restricts the cache to the first
-    `num_active` slots: inactive slots never match and are never victims,
-    which makes the state behave exactly like an LRU cache of that size.
-    This turns the slot *count* — normally a static shape — into a sweepable
-    runtime value: allocate the max size once, `vmap` over `num_active`.
+    Returns (new_state, hit, slot, unslotted, victim) so both the full
+    `lookup` (which also reports the evicted tag) and the lean fused
+    fleet-scan path (`lookup_fused`, which only needs state + hit) build on
+    exactly the same eviction logic and can never drift apart.
     """
     tag = jnp.asarray(tag, jnp.int32)
     unslotted = tag < 0
@@ -86,9 +83,6 @@ def lookup(state: SlotState, tag: jnp.ndarray,
     victim = jnp.argmin(use_key).astype(jnp.int32)
 
     slot = jnp.where(hit_any, hit_slot, victim)
-    evicted = jnp.where(
-        hit_any | unslotted, EMPTY, jnp.where(empties[victim], EMPTY, state.tags[victim])
-    )
 
     clock = state.clock + 1
     do_touch = ~unslotted
@@ -103,23 +97,71 @@ def lookup(state: SlotState, tag: jnp.ndarray,
         state.last_use,
     )
     new_state = SlotState(tags=new_tags, last_use=new_last, clock=clock)
+    return new_state, hit_any | unslotted, slot, unslotted, victim
+
+
+def lookup(state: SlotState, tag: jnp.ndarray,
+           num_active: jnp.ndarray | None = None) -> LookupResult:
+    """Access `tag`; fill the LRU victim on a miss.  tag == -1 is unslotted
+    (a hardwired base instruction) and leaves the state untouched but still
+    reports hit=True so callers charge no reconfiguration latency.
+
+    `num_active` (optional, traced) restricts the cache to the first
+    `num_active` slots: inactive slots never match and are never victims,
+    which makes the state behave exactly like an LRU cache of that size.
+    This turns the slot *count* — normally a static shape — into a sweepable
+    runtime value: allocate the max size once, `vmap` over `num_active`.
+    """
+    tag = jnp.asarray(tag, jnp.int32)
+    new_state, hit, slot, unslotted, victim = _access(state, tag, num_active)
+    # a miss that filled an empty slot displaced nothing: tags[victim] is
+    # already EMPTY in that case, so no extra guard is needed
+    evicted = jnp.where(hit | unslotted, EMPTY, state.tags[victim])
     return LookupResult(
         state=new_state,
-        hit=hit_any | unslotted,
+        hit=hit,
         slot=jnp.where(unslotted, EMPTY, slot),
         evicted_tag=evicted,
     )
 
 
-def lookup_batch(state: SlotState, tags: jnp.ndarray) -> tuple[SlotState, jnp.ndarray]:
+def lookup_fused(slot_state: SlotState, bs_state: SlotState,
+                 tag: jnp.ndarray,
+                 num_active: jnp.ndarray | None = None):
+    """One fused disambiguator + bitstream-cache access — the fleet scan's
+    hot pair (paper §IV: a disambiguator miss fetches the bitstream through
+    the bitstream cache; a miss there goes to the unified L2).
+
+    Semantically identical to
+
+        res = lookup(slot_state, tag, num_active)
+        bs  = lookup(bs_state, where(res.hit, EMPTY, tag))
+
+    but skips the victim-reporting outputs neither cache consumer uses, so
+    the per-step state update inside `lax.scan` stays minimal.  Returns
+    (slot_state, bs_state, hit, bs_hit).
+    """
+    tag = jnp.asarray(tag, jnp.int32)
+    slot_state, hit, _, _, _ = _access(slot_state, tag, num_active)
+    bs_state, bs_hit, _, _, _ = _access(
+        bs_state, jnp.where(hit, EMPTY, tag))
+    return slot_state, bs_state, hit, bs_hit
+
+
+def lookup_batch(state: SlotState, tags: jnp.ndarray,
+                 num_active: jnp.ndarray | None = None
+                 ) -> tuple[SlotState, jnp.ndarray]:
     """Sequentially access a vector of tags; returns (state, hits bool vector).
 
     A thin `lax.scan` over `lookup` — used by the expert-slot runtime where a
-    token block touches a sequence of expert ids on one device.
+    token block touches a sequence of expert ids on one device.  `num_active`
+    masks the pool down exactly like `lookup`'s, so the expert-slot runtime
+    can sweep pool sizes over one max-size state the same way the simulator
+    sweeps disambiguator sizes.
     """
 
     def step(st, tag):
-        r = lookup(st, tag)
+        r = lookup(st, tag, num_active)
         return r.state, r.hit
 
     return jax.lax.scan(step, state, tags)

@@ -213,14 +213,17 @@ def estimate_fleet_contention(benches: list[str], *, num_slots: int = 4,
     tr = np.stack([core_traces.build_trace(n, trace_len) for n in benches])
     fleet = simulator.simulate_many(tr, cfg, scenarios, sched, total_steps)
 
-    # solo reference: each tenant alone on the core, never preempted
+    # solo reference: each tenant alone on the core, never preempted — both
+    # branches route through `sweep_fleet`, whose dispatcher collapses these
+    # warm-cache unpreempted runs into stack-distance passes (no scan)
     solo_sched = simulator.SchedulerConfig.no_preempt(handler_cycles)
     if isinstance(scenarios, (list, tuple)):
-        # per-tenant taxonomies: one P=1 run per distinct (bench, scenario)
+        # per-tenant taxonomies: one P=1 sweep cell per (bench, scenario)
         solo_cpis = [
-            float(np.asarray(simulator.simulate_many(
-                tr[i:i + 1], cfg, s, solo_sched,
-                total_steps=trace_len).cpi)[0])
+            float(np.asarray(simulator.sweep_fleet(
+                tr[i:i + 1, None, :], [miss_latency], s, solo_sched,
+                slot_counts=[num_slots],
+                total_steps=trace_len).cpi)[0, 0, 0, 0])
             for i, s in enumerate(scenarios)]
     else:
         # shared taxonomy: all P solo runs as one batched sweep cell

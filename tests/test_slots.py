@@ -1,12 +1,19 @@
-"""Unit + property tests for the instruction disambiguator (exact LRU)."""
+"""Unit + property tests for the instruction disambiguator (exact LRU).
+
+The deterministic tests always run; the hypothesis property tests skip when
+the dev extra is not installed (they do run in CI, which installs
+``.[dev]``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")  # dev extra, not runtime dep
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:  # dev extra, not a runtime dep — only the property tests need it
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.core import slots
 
@@ -66,13 +73,7 @@ def test_eviction_reports_victim_tag():
     assert int(res.evicted_tag) == 7
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    num_slots=st.integers(min_value=1, max_value=6),
-    tags=st.lists(st.integers(min_value=-1, max_value=9), min_size=1,
-                  max_size=60),
-)
-def test_lru_matches_python_oracle(num_slots, tags):
+def _lru_vs_oracle(num_slots, tags):
     """JAX exact-LRU == reference python LRU for arbitrary tag sequences."""
     _, got = run_sequence(num_slots, tags)
     ref = PyLRU(num_slots)
@@ -80,20 +81,47 @@ def test_lru_matches_python_oracle(num_slots, tags):
     assert got == want
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    num_slots=st.integers(min_value=1, max_value=5),
-    tags=st.lists(st.integers(min_value=0, max_value=8), min_size=1,
-                  max_size=40),
-)
-def test_occupancy_bounded_and_monotone(num_slots, tags):
-    state = slots.init(num_slots)
-    prev = 0
-    for t in tags:
-        state = slots.lookup(state, jnp.int32(t)).state
-        occ = int(slots.occupancy(state))
-        assert prev <= occ <= min(num_slots, len(set(tags)))
-        prev = occ
+def test_lru_matches_python_oracle_seeded():
+    """Always-on seeded variant of the oracle property."""
+    rng = np.random.default_rng(7)
+    for _ in range(8):
+        _lru_vs_oracle(int(rng.integers(1, 7)),
+                       [int(t) for t in rng.integers(-1, 10,
+                                                     rng.integers(1, 61))])
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        num_slots=st.integers(min_value=1, max_value=6),
+        tags=st.lists(st.integers(min_value=-1, max_value=9), min_size=1,
+                      max_size=60),
+    )
+    def test_lru_matches_python_oracle(num_slots, tags):
+        _lru_vs_oracle(num_slots, tags)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        num_slots=st.integers(min_value=1, max_value=5),
+        tags=st.lists(st.integers(min_value=0, max_value=8), min_size=1,
+                      max_size=40),
+    )
+    def test_occupancy_bounded_and_monotone(num_slots, tags):
+        state = slots.init(num_slots)
+        prev = 0
+        for t in tags:
+            state = slots.lookup(state, jnp.int32(t)).state
+            occ = int(slots.occupancy(state))
+            assert prev <= occ <= min(num_slots, len(set(tags)))
+            prev = occ
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+    def test_lru_matches_python_oracle():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+    def test_occupancy_bounded_and_monotone():
+        pass
 
 
 def test_lookup_batch_matches_sequential():
@@ -102,6 +130,83 @@ def test_lookup_batch_matches_sequential():
     state = slots.init(3)
     _, batch_hits = slots.lookup_batch(state, jnp.array(tags, jnp.int32))
     assert [bool(h) for h in batch_hits] == seq_hits
+
+
+def test_lookup_batch_num_active_matches_masked_lookup():
+    """`num_active` must thread through lookup_batch exactly like per-step
+    `lookup` masking."""
+    tags = jnp.array([3, 1, 3, 2, 4, 1, -1, 3, 2, 2], jnp.int32)
+    for k in (1, 2, 3):
+        state = slots.init(4)
+        seq_hits = []
+        for t in np.asarray(tags):
+            r = slots.lookup(state, jnp.int32(int(t)), jnp.int32(k))
+            state = r.state
+            seq_hits.append(bool(r.hit))
+        _, batch_hits = slots.lookup_batch(slots.init(4), tags,
+                                           num_active=jnp.int32(k))
+        assert [bool(h) for h in batch_hits] == seq_hits
+
+
+def test_lookup_batch_num_active_equals_dedicated_size():
+    """Masking a max-size pool down to k slots behaves exactly like a
+    dedicated k-slot pool — the property the simulator's slot-count sweep
+    and the expert-slot runtime both rely on."""
+    tags = jnp.array([5, 6, 5, 7, 8, 6, 5, 9, 7, 7, 6], jnp.int32)
+    for k in (1, 2, 3, 4):
+        _, masked = slots.lookup_batch(slots.init(8), tags,
+                                       num_active=jnp.int32(k))
+        _, dedicated = slots.lookup_batch(slots.init(k), tags)
+        np.testing.assert_array_equal(np.asarray(masked),
+                                      np.asarray(dedicated))
+
+
+def _fused_vs_chained(num_slots, bs_slots, num_active, tags):
+    """The fused fleet-scan update must equal the two chained `lookup`
+    calls it replaces — states and hit bits, bit for bit."""
+    num_active = min(num_active, num_slots)
+    fused_slot, fused_bs = slots.init(num_slots), slots.init(bs_slots)
+    ref_slot, ref_bs = slots.init(num_slots), slots.init(bs_slots)
+    for t in tags:
+        fused_slot, fused_bs, hit, bs_hit = slots.lookup_fused(
+            fused_slot, fused_bs, jnp.int32(t), jnp.int32(num_active))
+        res = slots.lookup(ref_slot, jnp.int32(t), jnp.int32(num_active))
+        bs_res = slots.lookup(
+            ref_bs, jnp.where(res.hit, slots.EMPTY, jnp.int32(t)))
+        ref_slot, ref_bs = res.state, bs_res.state
+        assert bool(hit) == bool(res.hit)
+        assert bool(bs_hit) == bool(bs_res.hit)
+        for a, b in zip(fused_slot, ref_slot):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(fused_bs, ref_bs):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lookup_fused_matches_chained_lookups_seeded():
+    rng = np.random.default_rng(11)
+    for _ in range(6):
+        _fused_vs_chained(
+            int(rng.integers(1, 6)), int(rng.integers(1, 6)),
+            int(rng.integers(1, 6)),
+            [int(t) for t in rng.integers(-1, 7, rng.integers(1, 41))])
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        num_slots=st.integers(min_value=1, max_value=5),
+        bs_slots=st.integers(min_value=1, max_value=5),
+        num_active=st.integers(min_value=1, max_value=5),
+        tags=st.lists(st.integers(min_value=-1, max_value=6), min_size=1,
+                      max_size=40),
+    )
+    def test_lookup_fused_matches_chained_lookups(num_slots, bs_slots,
+                                                  num_active, tags):
+        _fused_vs_chained(num_slots, bs_slots, num_active, tags)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+    def test_lookup_fused_matches_chained_lookups():
+        pass
 
 
 def test_jit_and_vmap_compatible():

@@ -1,0 +1,269 @@
+"""Stack-distance fast path: exact parity with the `lax.scan` reference.
+
+The engine (`repro.core.stackdist`) is only ever allowed to serve results
+that are bit-for-bit identical to the cycle-by-cycle scan, so every test
+here asserts *exact* integer equality, never closeness.  The fig6-grid test
+additionally pins the paper anchor (avg s2@50c ~ 0.71) so the Fig. 6
+numbers cannot drift regardless of which engine serves them.
+"""
+import numpy as np
+import pytest
+
+from repro.core import isa, simulator, stackdist, traces
+
+NO_PREEMPT = simulator.SchedulerConfig.no_preempt()
+
+
+def _assert_fleet_equal(a: simulator.FleetResult, b: simulator.FleetResult):
+    for field, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"field {field}")
+
+
+# ---------------------------------------------------------------------------
+# distance-profile unit tests (hand-computed sequences)
+# ---------------------------------------------------------------------------
+
+def test_distance_profile_hand_sequence():
+    # tags:      1  2  1   3  2   -1  1
+    # distance:  c  c  1   c  2   --  2   (c = cold, -- = unslotted)
+    tags = np.array([1, 2, 1, 3, 2, -1, 1], np.int32)
+    costs = np.ones_like(tags)
+    prof = stackdist.distance_profile(tags, costs, num_tags=4)
+    assert int(prof.cold) == 3
+    np.testing.assert_array_equal(np.asarray(prof.hist), [0, 1, 2, 0])
+    assert int(prof.base_cycles) == 7
+    # LRU of size S misses when distance >= S, plus the 3 cold accesses
+    misses = stackdist.misses_for_counts(prof, np.array([1, 2, 3, 4]))
+    np.testing.assert_array_equal(np.asarray(misses), [6, 5, 3, 3])
+
+
+def test_distance_profile_all_unslotted():
+    tags = np.full(10, -1, np.int32)
+    prof = stackdist.distance_profile(tags, np.full(10, 2, np.int32),
+                                      num_tags=1)
+    assert int(prof.cold) == 0 and int(prof.hist.sum()) == 0
+    assert int(prof.base_cycles) == 20
+
+
+def test_cycles_grid_affine_reconstruction():
+    tags = np.array([0, 1, 0, 1, 0], np.int32)
+    costs = np.array([1, 2, 1, 2, 1], np.int32)
+    prof = stackdist.distance_profile(tags, costs, num_tags=2)
+    grid = stackdist.cycles_grid(prof, np.array([1, 2]), np.array([10, 50]),
+                                 bs_miss_extra=100)
+    # S=1: every access misses (5) ; S=2: only the 2 cold misses
+    np.testing.assert_array_equal(np.asarray(grid.slot_misses), [5, 2])
+    assert int(grid.bs_misses) == 2
+    # cycles = 7 + misses*L + 2*100
+    np.testing.assert_array_equal(
+        np.asarray(grid.cycles),
+        [[7 + 50 + 200, 7 + 250 + 200], [7 + 20 + 200, 7 + 100 + 200]])
+
+
+# ---------------------------------------------------------------------------
+# dispatcher semantics
+# ---------------------------------------------------------------------------
+
+def test_eligibility_rules():
+    tag_row = isa.SCENARIO_2.instr_tag
+    ok = dict(quantum_cycles=simulator.NO_PREEMPT_QUANTUM, bs_entries=64,
+              max_miss_latency=250, bs_miss_extra=100, total_steps=40_000)
+    assert simulator.stackdist_eligible(tag_row, **ok)
+    # preempted
+    assert not simulator.stackdist_eligible(
+        tag_row, **{**ok, "quantum_cycles": 20_000})
+    # cold bitstream cache (scenario 2 has 10 distinct tags)
+    assert not simulator.stackdist_eligible(
+        tag_row, **{**ok, "bs_entries": 4})
+    # overflow guard: a grid whose worst case could reach the quantum
+    assert not simulator.stackdist_eligible(
+        tag_row, **{**ok, "max_miss_latency": 1 << 29})
+
+
+def test_forcing_stackdist_on_ineligible_grid_raises():
+    tr = traces.build_trace("nbody", 4_000)[None, None, :]
+    with pytest.raises(ValueError, match="stack-distance"):
+        simulator.sweep_fleet(
+            tr, [50], isa.SCENARIO_2,
+            simulator.SchedulerConfig(quantum_cycles=5_000),
+            slot_counts=[4], total_steps=4_000, path="stackdist")
+    with pytest.raises(ValueError, match="unknown path"):
+        simulator.sweep_fleet(tr, [50], isa.SCENARIO_2, NO_PREEMPT,
+                              slot_counts=[4], total_steps=4_000,
+                              path="bogus")
+
+
+def test_auto_dispatch_matches_both_forced_paths():
+    tr = traces.build_trace("cubic", 8_000)[None, None, :]
+    kw = dict(slot_counts=[2, 4], total_steps=8_000)
+    auto = simulator.sweep_fleet(tr, [10, 50], isa.SCENARIO_2, NO_PREEMPT,
+                                 **kw)
+    fast = simulator.sweep_fleet(tr, [10, 50], isa.SCENARIO_2, NO_PREEMPT,
+                                 path="stackdist", **kw)
+    scan = simulator.sweep_fleet(tr, [10, 50], isa.SCENARIO_2, NO_PREEMPT,
+                                 path="scan", **kw)
+    _assert_fleet_equal(auto, fast)
+    _assert_fleet_equal(auto, scan)
+
+
+def test_wraparound_total_steps_parity():
+    """total_steps > trace_len wraps the cursor; both engines must agree."""
+    tr = traces.build_trace("minver", 5_000)[None, None, :]
+    kw = dict(slot_counts=[4], total_steps=12_500)
+    fast = simulator.sweep_fleet(tr, [50], isa.SCENARIO_2, NO_PREEMPT,
+                                 path="stackdist", **kw)
+    scan = simulator.sweep_fleet(tr, [50], isa.SCENARIO_2, NO_PREEMPT,
+                                 path="scan", **kw)
+    _assert_fleet_equal(fast, scan)
+
+
+def test_single_and_batch_paths_parity():
+    cfg = simulator.ReconfigConfig(num_slots=4, miss_latency=50)
+    tr = traces.build_trace("st", 10_000)
+    one_fast = simulator.simulate_single(tr, cfg, isa.SCENARIO_2,
+                                         path="stackdist")
+    one_scan = simulator.simulate_single(tr, cfg, isa.SCENARIO_2,
+                                         path="scan")
+    for x, y in zip(one_fast, one_scan):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    trs = np.stack([tr, traces.build_trace("wikisort", 10_000)])
+    b_fast = simulator.simulate_single_batch(trs, [10, 250], cfg,
+                                             isa.SCENARIO_2,
+                                             path="stackdist")
+    b_scan = simulator.simulate_single_batch(trs, [10, 250], cfg,
+                                             isa.SCENARIO_2, path="scan")
+    for x, y in zip(b_fast, b_scan):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_chunked_batch_axis_matches_unchunked(monkeypatch):
+    """The memory-bounding fleet-axis chunking must not change results."""
+    fleet = np.stack([traces.build_trace(n, 4_000)
+                      for n in ("nbody", "st", "minver")])[:, None, :]
+    kw = dict(slot_counts=[2, 4], total_steps=4_000, path="stackdist")
+    whole = simulator.sweep_fleet(fleet, [10, 50], isa.SCENARIO_2,
+                                  NO_PREEMPT, **kw)
+    monkeypatch.setattr(simulator, "_STACKDIST_CHUNK_ELEMS", 40_000)
+    chunked = simulator.sweep_fleet(fleet, [10, 50], isa.SCENARIO_2,
+                                    NO_PREEMPT, **kw)
+    _assert_fleet_equal(whole, chunked)
+
+    cfg = simulator.ReconfigConfig(num_slots=4, miss_latency=50)
+    trs, lats = fleet[:, 0, :], [10, 50, 250]
+    whole_b = simulator.simulate_single_batch(trs, lats, cfg,
+                                              isa.SCENARIO_2,
+                                              path="stackdist")
+    monkeypatch.setattr(simulator, "_STACKDIST_CHUNK_ELEMS", 80_000)
+    chunk_b = simulator.simulate_single_batch(trs, lats, cfg,
+                                              isa.SCENARIO_2,
+                                              path="stackdist")
+    for x, y in zip(whole_b, chunk_b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_cold_bitstream_cache_falls_back_to_scan():
+    """An undersized bitstream cache (bitstream_study's axis) is ineligible;
+    auto must still serve the historical scan numbers."""
+    tr = traces.build_trace("nbody", 8_000)[None, None, :]
+    auto = simulator.sweep_fleet(tr, [50], isa.SCENARIO_2, NO_PREEMPT,
+                                 slot_counts=[4], bs_cache_entries=4,
+                                 total_steps=8_000)
+    scan = simulator.sweep_fleet(tr, [50], isa.SCENARIO_2, NO_PREEMPT,
+                                 slot_counts=[4], bs_cache_entries=4,
+                                 total_steps=8_000, path="scan")
+    _assert_fleet_equal(auto, scan)
+    # a cold cache can only do worse than warm mode's one-miss-per-tag
+    warm = simulator.sweep_fleet(tr, [50], isa.SCENARIO_2, NO_PREEMPT,
+                                 slot_counts=[4], total_steps=8_000)
+    assert int(np.asarray(auto.bs_misses)[0, 0, 0, 0]) >= \
+        int(np.asarray(warm.bs_misses)[0, 0, 0, 0]) > 0
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed fig6-grid parity + paper anchor
+# ---------------------------------------------------------------------------
+
+def test_fig6_grid_bit_for_bit_parity_and_anchor():
+    """The Fig. 6 grid served by either engine must be identical, and the
+    s2@50c average must stay at the paper's ~0.71 anchor."""
+    fleet = np.stack([traces.build_trace(n, 40_000)
+                      for n in traces.FM_BENCHES])[:, None, :]
+    cpis_s2 = None
+    for scen in (isa.SCENARIO_1, isa.SCENARIO_2, isa.SCENARIO_3):
+        kw = dict(slot_counts=(scen.num_slots,), total_steps=40_000)
+        fast = simulator.sweep_fleet(fleet, (10, 50, 250), scen, NO_PREEMPT,
+                                     path="stackdist", **kw)
+        scan = simulator.sweep_fleet(fleet, (10, 50, 250), scen, NO_PREEMPT,
+                                     path="scan", **kw)
+        _assert_fleet_equal(fast, scan)
+        if scen is isa.SCENARIO_2:
+            cpis_s2 = np.asarray(fast.cpi)     # (5, 1, 3, 1)
+    sp = [simulator.analytic_cpi(traces.mix_of(n), isa.RV32IMF)
+          / cpis_s2[i, 0, 1, 0] for i, n in enumerate(traces.FM_BENCHES)]
+    assert np.mean(sp) == pytest.approx(0.71, abs=0.06)
+
+
+# ---------------------------------------------------------------------------
+# property tests: random traces/scenarios/slot counts vs the scan, exactly
+# ---------------------------------------------------------------------------
+
+TRACE_LEN = 256  # fixed so the scan reference compiles once for all examples
+
+
+def _check_random_grid(ops, tag_of, counts, lats, bs_extra):
+    trace = np.resize(np.asarray(ops, np.int32), TRACE_LEN)
+    scenario = isa.SlotScenario(
+        name="rand", num_slots=max(counts),
+        instr_tag=np.asarray(tag_of, np.int32))
+    fleet = trace[None, None, :]
+    kw = dict(slot_counts=sorted(counts), bs_miss_extra=int(bs_extra),
+              total_steps=TRACE_LEN)
+    fast = simulator.sweep_fleet(fleet, lats, scenario, NO_PREEMPT,
+                                 path="stackdist", **kw)
+    scan = simulator.sweep_fleet(fleet, lats, scenario, NO_PREEMPT,
+                                 path="scan", **kw)
+    _assert_fleet_equal(fast, scan)
+
+
+def test_seeded_random_grids_match_scan_exactly():
+    """Always-on (no hypothesis needed) seeded variant of the property:
+    random traces, taxonomies, slot-count sets and latency grids."""
+    rng = np.random.default_rng(42)
+    for _ in range(6):
+        _check_random_grid(
+            ops=rng.integers(0, isa.NUM_INSTRUCTIONS, 64),
+            tag_of=rng.integers(-1, 7, isa.NUM_INSTRUCTIONS),
+            counts=[int(c) for c in rng.integers(1, 9, 3)],
+            lats=[int(v) for v in rng.integers(0, 301, 2)],
+            bs_extra=int(rng.integers(0, 201)))
+
+
+try:  # dev extra, not a runtime dep — only these tests skip without it
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        ops=st.lists(st.integers(0, isa.NUM_INSTRUCTIONS - 1),
+                     min_size=1, max_size=64),
+        tag_of=st.lists(st.integers(-1, 6), min_size=isa.NUM_INSTRUCTIONS,
+                        max_size=isa.NUM_INSTRUCTIONS),
+        counts=st.lists(st.integers(1, 8), min_size=3, max_size=3),
+        lats=st.lists(st.integers(0, 300), min_size=2, max_size=2),
+        bs_extra=st.integers(0, 200),
+    )
+    def test_stackdist_matches_scan_exactly(ops, tag_of, counts, lats,
+                                            bs_extra):
+        """Random trace, random instr->tag taxonomy, random slot-count set
+        and latency grid: the fast path must equal the scan bit-for-bit."""
+        _check_random_grid(ops, tag_of, counts, lats, bs_extra)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+    def test_stackdist_matches_scan_exactly():
+        pass
