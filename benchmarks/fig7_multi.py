@@ -5,11 +5,11 @@ fixed RV32I/IM/IF references.  Validates the paper's aggregate anchors:
 4-slot@20K ~ 0.82x IMF average and 3.39x / 1.48x / 2.04x over I / IM / IF;
 quantum lengthening 1K->20K improves the reconfigurable series.
 
-The whole {50 pairs x 3 slot counts x miss latency} grid runs as ONE
-jitted `simulator.sweep_fleet` call per quantum (slot counts sweep via
-disambiguator masking).  `run_fleets` extends the experiment beyond the
-paper: P=4 fleets (`scheduler.make_fleets(4)`) across a miss-latency grid,
-again one jitted call.
+The whole {2 quanta x 50 pairs x 3 slot counts x miss latency} grid runs
+as ONE jitted `simulator.sweep_fleet` call (slot counts sweep via
+disambiguator masking, quanta via the quantum axis).  `run_fleets` extends
+the experiment beyond the paper: P=4 fleets (`scheduler.make_fleets(4)`)
+across a miss-latency grid, again one jitted call.
 """
 from __future__ import annotations
 
@@ -37,7 +37,16 @@ def run(pairs=None) -> tuple[list[str], dict]:
     rows = ["pair,series,quantum,avg_speedup_vs_IMF"]
     agg: dict = {}
 
-    for q in QUANTA:
+    # reconfigurable slot-count variants: ONE jitted sweep over the whole
+    # {quanta x pairs x slot counts x latency} grid — the scheduler quantum
+    # is just another sweep axis now
+    res = simulator.sweep_fleet(
+        tensor, [MISS_LATENCY], isa.SCENARIO_2,
+        simulator.SchedulerConfig(), slot_counts=SLOT_COUNTS,
+        quanta=QUANTA, total_steps=TOTAL_STEPS)
+    cpis_all = np.asarray(res.cpi)          # (Q, B, K, 1, 2)
+
+    for qi, q in enumerate(QUANTA):
         sched = simulator.SchedulerConfig(quantum_cycles=q)
         # fixed-ISA references (analytic fleet CPI)
         for spec_name in ("RV32I", "RV32IM", "RV32IF"):
@@ -50,12 +59,7 @@ def run(pairs=None) -> tuple[list[str], dict]:
                                                         sched) /
                               simulator.fixed_fleet_cpi(mix, spec, sched))
                 agg.setdefault((spec_name, q), []).append(float(np.mean(sp)))
-        # reconfigurable slot-count variants: one jitted sweep over the
-        # {pairs x slot counts x latency} grid
-        res = simulator.sweep_fleet(
-            tensor, [MISS_LATENCY], isa.SCENARIO_2, sched,
-            slot_counts=SLOT_COUNTS, total_steps=TOTAL_STEPS)
-        cpis = np.asarray(res.cpi)          # (B, K, 1, 2)
+        cpis = cpis_all[qi]                 # (B, K, 1, 2)
         for k, nslots in enumerate(SLOT_COUNTS):
             vname = f"{nslots}slot"
             for i, (a, b) in enumerate(pairs):

@@ -98,6 +98,14 @@ def bench_perf_sweep():
     return lines, head[2:]
 
 
+def bench_placement_study():
+    """Contention-aware placement vs random/FIFO co-residency (repro.sched)."""
+    from benchmarks import placement_study
+    lines, _ = placement_study.run()
+    head = [l for l in lines if l.startswith("# finding")][0]
+    return lines, head[2:]
+
+
 BENCHES = {
     "fig4_extensions": bench_fig4,
     "fig5_classification": bench_fig5,
@@ -109,6 +117,7 @@ BENCHES = {
     "perf_slot_decode": bench_perf_slot_decode,
     "roofline_table": bench_roofline,
     "perf_sweep": bench_perf_sweep,
+    "placement_study": bench_placement_study,
 }
 
 

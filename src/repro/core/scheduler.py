@@ -28,17 +28,26 @@ from repro.core import traces
 from repro.core.simulator import SchedulerConfig  # noqa: F401  (re-export)
 
 
-def make_fleets(k: int) -> list[tuple[str, ...]]:
+def make_fleets(k: int, fm: list[str] | None = None,
+                m: list[str] | None = None) -> list[tuple[str, ...]]:
     """All slot-competing k-way benchmark fleets (k >= 2).
 
     C(|FM|, k) all-FM fleets, then C(|FM|, k-1) x |M| fleets of FM-class
-    programs joined by one M-only program.  For k=2 this is the paper's 50
-    combinations in their original order.
+    programs joined by one M-only program — |fleets| = C(|FM|, k) +
+    C(|FM|, k-1) * |M|, and every fleet carries at least k-1 FM working
+    sets, which is what guarantees slot competition.  For k=2 with the
+    default pools this is the paper's 50 combinations in their original
+    order.  `fm`/`m` override the benchmark pools (property tests and
+    custom tenant studies); programs never repeat within a fleet.
     """
     if k < 2:
         raise ValueError(f"fleets need at least 2 programs, got k={k}")
-    fm = traces.FM_BENCHES
-    m = traces.M_BENCHES
+    fm = traces.FM_BENCHES if fm is None else list(fm)
+    m = traces.M_BENCHES if m is None else list(m)
+    if k - 1 > len(fm):
+        raise ValueError(
+            f"k={k} fleets need at least k-1={k - 1} FM-class benchmarks, "
+            f"pool has {len(fm)}")
     fleets = list(itertools.combinations(fm, k))
     fleets += [c + (b,) for c in itertools.combinations(fm, k - 1)
                for b in m]

@@ -16,9 +16,14 @@ a cycle quantum and a context-switch handler cost; slot state deliberately
 persists across switches (the architecture's whole point — shared extensions
 stay resident, §IV).  The scheduler runs over arbitrary fleets of P programs
 (`simulate_many`), each with its own slot taxonomy (per-program tag tables),
-and `sweep_fleet` crosses {fleets x slot counts x miss latencies} in one
-jitted vmap^3 — slot counts sweep dynamically by masking a max-size
-disambiguator.  The paper's pair experiments are the P=2 special case.
+heterogeneous per-program quanta, and integer priority weights (weighted
+round-robin — see `SchedulerConfig`; the uniform unit-priority case is the
+paper's scheduler, bit-for-bit).  `sweep_fleet` crosses {quanta x fleets x
+slot counts x miss latencies} in one jitted vmap^4 — slot counts sweep
+dynamically by masking a max-size disambiguator, quanta by vmapping the
+per-program quantum vector.  The paper's pair experiments are the P=2
+special case; the scheduling-policy axes feed `repro.sched`'s
+contention-aware placement and admission control.
 
 Two execution paths serve the sweep entry points (`sweep_fleet`,
 `simulate_single`, `simulate_single_batch`); a dispatcher picks per call:
@@ -58,6 +63,7 @@ from repro.core.traces import Mix, analytic_cpi  # re-export for callers
 __all__ = [
     "ReconfigConfig", "SchedulerConfig", "SimResult", "PairResult",
     "FleetResult", "fleet_tag_table", "stackdist_eligible",
+    "quanta_vector", "priority_schedule",
     "simulate_single", "simulate_single_batch",
     "simulate_many", "sweep_fleet",
     "simulate_pair", "simulate_pair_batch",
@@ -91,17 +97,78 @@ NO_PREEMPT_QUANTUM = 1 << 30
 
 @dataclass(frozen=True)
 class SchedulerConfig:
-    """Round-robin OS scheduler model (paper §V-B, §VI-C)."""
+    """Round-robin OS scheduler model (paper §V-B, §VI-C).
 
-    quantum_cycles: int = 20_000
+    Beyond the paper's single uniform quantum, the scheduler supports
+
+      * **heterogeneous quanta** — `quantum_cycles` may be a length-P tuple
+        giving each program its own timer quantum, and
+      * **priority weights** — `priorities` (length-P positive ints) turn
+        the plain round-robin into a weighted one: program p takes
+        `priorities[p]` consecutive quanta per rotation, so CPU share is
+        proportional to the weight.  The timer interrupt (and its
+        `handler_cycles`) still fires at every quantum expiry, including
+        back-to-back quanta of the same program.
+
+    A scalar `quantum_cycles` with `priorities=None` is exactly the paper's
+    uniform round-robin and reproduces it bit-for-bit.
+    """
+
+    quantum_cycles: int | tuple[int, ...] = 20_000
     handler_cycles: int = 150   # timer-interrupt + context-switch routine
                                 # (incl. the 32 FP registers added in §V-B)
+    priorities: tuple[int, ...] | None = None
 
     @classmethod
     def no_preempt(cls, handler_cycles: int = 150) -> "SchedulerConfig":
         """A scheduler that never fires — for solo-program references."""
         return cls(quantum_cycles=NO_PREEMPT_QUANTUM,
                    handler_cycles=handler_cycles)
+
+    def quanta(self, num_programs: int) -> np.ndarray:
+        """(P,) int32 per-program quantum vector (scalars broadcast)."""
+        return quanta_vector(self.quantum_cycles, num_programs)
+
+    def schedule(self, num_programs: int) -> np.ndarray:
+        """The weighted round-robin turn order (see `priority_schedule`)."""
+        return priority_schedule(self.priorities, num_programs)
+
+
+def quanta_vector(quantum_cycles, num_programs: int) -> np.ndarray:
+    """Normalise a scalar-or-vector quantum spec to a (P,) int32 vector."""
+    q = np.asarray(quantum_cycles, dtype=np.int64)
+    if q.ndim == 0:
+        q = np.full((num_programs,), int(q), np.int64)
+    if q.shape != (num_programs,):
+        raise ValueError(
+            f"quantum_cycles vector has shape {q.shape}, expected "
+            f"({num_programs},) for a fleet of P={num_programs} programs")
+    if np.any(q <= 0):
+        raise ValueError(f"quantum_cycles must be positive, got {q.tolist()}")
+    return q.astype(np.int32)
+
+
+def priority_schedule(priorities, num_programs: int) -> np.ndarray:
+    """Weighted round-robin turn order as a flat program-index sequence.
+
+    `priorities=None` (or all-ones) is the plain rotation `[0, 1, .., P-1]`;
+    weights `(2, 1)` yield `[0, 0, 1]`: program 0 takes two consecutive
+    quanta per rotation.  The scan holds a cursor into this (static-length)
+    sequence, so the weighted policy costs one extra gather per step and the
+    uniform case stays bit-for-bit identical to the historical rotation.
+    """
+    if priorities is None:
+        return np.arange(num_programs, dtype=np.int32)
+    pr = np.asarray(priorities, dtype=np.int64)
+    if pr.shape != (num_programs,):
+        raise ValueError(
+            f"priorities vector has shape {pr.shape}, expected "
+            f"({num_programs},) for a fleet of P={num_programs} programs")
+    if np.any(pr <= 0):
+        raise ValueError(f"priorities must be positive ints, got "
+                         f"{pr.tolist()}")
+    return np.repeat(np.arange(num_programs, dtype=np.int32),
+                     pr).astype(np.int32)
 
 
 class SimResult(NamedTuple):
@@ -131,7 +198,7 @@ class PairResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def stackdist_eligible(tag_row, *, quantum_cycles: int, bs_entries: int,
+def stackdist_eligible(tag_row, *, quantum_cycles, bs_entries: int,
                        max_miss_latency: int, bs_miss_extra: int,
                        total_steps: int) -> bool:
     """True iff the stack-distance fast path is *exact* for this run.
@@ -146,13 +213,19 @@ def stackdist_eligible(tag_row, *, quantum_cycles: int, bs_entries: int,
     3. no-overflow guard: even the worst-case per-step cost summed over
        `total_steps` stays below the quantum — the scan's q_cycles
        accumulator can provably never fire a switch (and int32 stays safe).
+
+    `quantum_cycles` may be a scalar, a per-program vector, or a whole
+    swept quantum grid: with heterogeneous quanta a run is unpreempted only
+    when EVERY program's quantum is unreachable, so eligibility is judged
+    on the minimum over all entries.
     """
     num_tags = int(np.max(tag_row)) + 1
     warm = bs_entries >= num_tags
     worst_step = (int(np.max(isa.INSTR_HW_CYCLES)) + int(max_miss_latency)
                   + int(bs_miss_extra))
-    unpreempted = (quantum_cycles >= NO_PREEMPT_QUANTUM
-                   and total_steps * worst_step < quantum_cycles)
+    min_quantum = int(np.min(np.asarray(quantum_cycles)))
+    unpreempted = (min_quantum >= NO_PREEMPT_QUANTUM
+                   and total_steps * worst_step < min_quantum)
     return warm and unpreempted
 
 
@@ -178,7 +251,9 @@ def _simulate_single(trace, instr_tag, miss_latency, num_slots: int,
     """
     r = _simulate_fleet_impl(
         trace[None, :], instr_tag[None, :], miss_latency,
-        jnp.int32(num_slots), jnp.int32(NO_PREEMPT_QUANTUM), jnp.int32(0),
+        jnp.int32(num_slots),
+        jnp.full((1,), NO_PREEMPT_QUANTUM, jnp.int32),
+        jnp.zeros((1,), jnp.int32), jnp.int32(0),
         num_slots, bs_entries, bs_miss_extra, trace.shape[0])
     return SimResult(r.cycles[0], r.instructions[0], r.slot_misses[0],
                      r.bs_misses[0])
@@ -287,27 +362,43 @@ def fleet_tag_table(scenarios, num_programs: int) -> np.ndarray:
     binaries were compiled against different extension sets, paper §IV).
     """
     if isinstance(scenarios, isa.SlotScenario):
-        return np.stack([scenarios.instr_tag] * num_programs)
-    scenarios = list(scenarios)
+        scenarios = [scenarios] * num_programs
+    else:
+        scenarios = list(scenarios)
     if len(scenarios) != num_programs:
         raise ValueError(
-            f"{len(scenarios)} scenarios for {num_programs} programs")
+            f"got {len(scenarios)} slot scenarios for a fleet of "
+            f"P={num_programs} programs — pass one SlotScenario to share, "
+            f"or exactly one per program")
+    for i, s in enumerate(scenarios):
+        tag = np.asarray(s.instr_tag)
+        if tag.shape != (isa.NUM_INSTRUCTIONS,):
+            raise ValueError(
+                f"scenario {i} ({getattr(s, 'name', s)!r}) has instr_tag "
+                f"shape {tag.shape}, expected ({isa.NUM_INSTRUCTIONS},)")
     return np.stack([s.instr_tag for s in scenarios])
 
 
-def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quantum,
-                   handler, bs_miss_extra):
+def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quanta,
+                   schedule, handler, bs_miss_extra):
     """Round-robin step over precomputed per-program (tag, cost) streams.
 
     `ptags`/`pcosts` are the (P, N) gathers `tags[p, traces[p, i]]` /
     `hw[traces[p, i]]` hoisted out of the step: the hot loop does two
     independent stream loads instead of a dependent double gather per cycle,
     and one fused disambiguator+bitstream update (`slots.lookup_fused`).
+
+    `quanta` is the (P,) per-program quantum vector and `schedule` the
+    weighted round-robin turn order (`priority_schedule`): the scan walks a
+    cursor through `schedule` instead of incrementing the program index, so
+    priority weights are one extra gather per step.  With uniform quanta
+    and unit priorities this reduces exactly to the historical rotation.
     """
-    num_progs, trace_len = ptags.shape
+    trace_len = ptags.shape[1]
+    sched_len = schedule.shape[0]
 
     def step(c, _):
-        p = c["active"]
+        p = schedule[c["sched_idx"]]
         i = jnp.remainder(c["cursors"][p], trace_len)
         tag = ptags[p, i]
         # on a disambiguator miss the bitstream is fetched through the
@@ -320,7 +411,7 @@ def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quantum,
                                 bs_miss_extra).astype(jnp.int32)
 
         q = c["q_cycles"] + cost
-        do_switch = q >= quantum
+        do_switch = q >= quanta[p]
         # the outgoing program pays the interrupt-handler cycles, mirroring
         # the paper's observation that short quanta inflate all runtimes
         cost_p = cost + jnp.where(do_switch, handler, 0).astype(jnp.int32)
@@ -331,7 +422,9 @@ def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quantum,
             "slot_st": slot_st,
             "bs_st": bs_st,
             "cursors": c["cursors"].at[p].add(1),
-            "active": jnp.where(do_switch, (p + 1) % num_progs, p),
+            "sched_idx": jnp.where(do_switch,
+                                   (c["sched_idx"] + 1) % sched_len,
+                                   c["sched_idx"]),
             "q_cycles": jnp.where(do_switch, 0, q),
             "cycles": c["cycles"].at[p].add(cost_p),
             "instrs": c["instrs"].at[p].add(1),
@@ -345,13 +438,15 @@ def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quantum,
 
 
 def _simulate_fleet_impl(traces, tag_table, miss_latency, active_slots,
-                         quantum, handler, num_slots: int, bs_entries: int,
-                         bs_miss_extra, total_steps: int,
+                         quanta, schedule, handler, num_slots: int,
+                         bs_entries: int, bs_miss_extra, total_steps: int,
                          scan_unroll: int = SCAN_UNROLL) -> FleetResult:
     """(P, N) traces + (P, num_opcodes) tags -> per-program FleetResult.
 
     `num_slots` is the *allocated* (static) disambiguator size;
     `active_slots` (traced) masks it down so slot count is a sweep axis.
+    `quanta` is the (P,) per-program quantum vector; `schedule` the
+    weighted round-robin turn order (see `priority_schedule`).
     """
     hw = jnp.asarray(isa.INSTR_HW_CYCLES, jnp.int32)
     tags = jnp.asarray(tag_table, jnp.int32)
@@ -366,7 +461,7 @@ def _simulate_fleet_impl(traces, tag_table, miss_latency, active_slots,
         "slot_st": slots.init(num_slots),
         "bs_st": slots.init(bs_entries),
         "cursors": jnp.zeros((num_progs,), jnp.int32),
-        "active": jnp.int32(0),
+        "sched_idx": jnp.int32(0),
         "q_cycles": jnp.int32(0),
         "cycles": jnp.zeros((num_progs,), jnp.int32),
         "instrs": jnp.zeros((num_progs,), jnp.int32),
@@ -375,7 +470,7 @@ def _simulate_fleet_impl(traces, tag_table, miss_latency, active_slots,
         "switches": jnp.int32(0),
     }
     step = _fleet_step_fn(ptags, pcosts, miss_latency, active_slots,
-                          quantum, handler, bs_miss_extra)
+                          quanta, schedule, handler, bs_miss_extra)
     final, _ = jax.lax.scan(step, init, None, length=total_steps,
                             unroll=scan_unroll)
     return FleetResult(final["cycles"], final["instrs"], final["misses"],
@@ -395,12 +490,22 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
 
     traces: (P, N) int32 instruction ids; `scenarios` is one shared
     `SlotScenario` or a length-P sequence (per-program slot taxonomies).
+    `sched` may carry per-program quanta and/or priority weights
+    (`SchedulerConfig`); the uniform unit-priority case reproduces the
+    paper's round-robin bit-for-bit.
     """
     traces = jnp.asarray(traces, jnp.int32)
-    table = fleet_tag_table(scenarios, traces.shape[0])
+    if traces.ndim != 2:
+        raise ValueError(
+            f"simulate_many expects (P, N) traces, got shape "
+            f"{tuple(traces.shape)}")
+    num_progs = traces.shape[0]
+    table = fleet_tag_table(scenarios, num_progs)
     return _simulate_fleet(
         traces, table, jnp.int32(cfg.miss_latency),
-        jnp.int32(cfg.num_slots), jnp.int32(sched.quantum_cycles),
+        jnp.int32(cfg.num_slots),
+        jnp.asarray(sched.quanta(num_progs)),
+        jnp.asarray(sched.schedule(num_progs)),
         jnp.int32(sched.handler_cycles), cfg.num_slots,
         cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra), total_steps,
         scan_unroll)
@@ -409,18 +514,20 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
 @functools.partial(
     jax.jit, static_argnames=("num_slots", "bs_entries", "total_steps",
                               "scan_unroll"))
-def _sweep_fleet(fleets, tag_table, miss_latencies, slot_counts, quantum,
-                 handler, num_slots: int, bs_entries: int, bs_miss_extra,
-                 total_steps: int, scan_unroll: int) -> FleetResult:
-    def one(t, s, lat):
+def _sweep_fleet(fleets, tag_table, miss_latencies, slot_counts, quanta,
+                 schedule, handler, num_slots: int, bs_entries: int,
+                 bs_miss_extra, total_steps: int,
+                 scan_unroll: int) -> FleetResult:
+    def one(t, s, lat, qv):
         return _simulate_fleet_impl(
-            t, tag_table, lat, s, quantum, handler, num_slots, bs_entries,
-            bs_miss_extra, total_steps, scan_unroll)
+            t, tag_table, lat, s, qv, schedule, handler, num_slots,
+            bs_entries, bs_miss_extra, total_steps, scan_unroll)
 
-    f = jax.vmap(one, in_axes=(None, None, 0))   # miss-latency axis
-    f = jax.vmap(f, in_axes=(None, 0, None))     # slot-count axis
-    f = jax.vmap(f, in_axes=(0, None, None))     # fleet axis
-    return f(fleets, slot_counts, miss_latencies)
+    f = jax.vmap(one, in_axes=(None, None, 0, None))   # miss-latency axis
+    f = jax.vmap(f, in_axes=(None, 0, None, None))     # slot-count axis
+    f = jax.vmap(f, in_axes=(0, None, None, None))     # fleet axis
+    f = jax.vmap(f, in_axes=(None, None, None, 0))     # quantum axis
+    return f(fleets, slot_counts, miss_latencies, quanta)
 
 
 # the distance profile materializes (total_steps, num_tags)-shaped int32
@@ -469,39 +576,75 @@ def _sweep_fleet_stackdist(fleets, table, lats, counts, bs_miss_extra,
 
 
 def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
-                sched: SchedulerConfig, *, slot_counts,
+                sched: SchedulerConfig, *, slot_counts, quanta=None,
                 bs_cache_entries: int = 64, bs_miss_extra: int = 100,
                 total_steps: int = 400_000, path: str = "auto",
                 scan_unroll: int = SCAN_UNROLL) -> FleetResult:
-    """One call over the {fleets x slot counts x miss latencies} grid.
+    """One call over the {quanta x fleets x slot counts x miss latencies}
+    grid.
 
-    fleets: (B, P, N) int32 traces.  Result axes: (B, K_slots, L_lat, P).
+    fleets: (B, P, N) int32 traces.  Result axes: (B, K_slots, L_lat, P) —
+    or, when `quanta` is given, (Q, B, K_slots, L_lat, P) with the swept
+    quantum axis outermost.  Each `quanta` entry is a scalar (shared by
+    every program) or a length-P vector of per-program quanta; `quanta=None`
+    keeps the historical 3-axis grid at `sched.quantum_cycles`.  Priority
+    weights (`sched.priorities`) apply to every cell of the grid.
 
-    Dispatch (see module docstring): eligible grids — unpreempted, warm
-    bitstream cache (`stackdist_eligible`) — collapse the K x L grid into
-    one stack-distance pass per fleet; everything else runs the jitted
-    vmap^3 of `lax.scan`s, where slot counts sweep by masking one max-size
-    disambiguator (`slots.lookup`'s `num_active`).  `path` forces a
-    specific engine ("stackdist" raises if the grid is ineligible);
-    both return bit-for-bit identical results on eligible grids.
+    Dispatch (see module docstring): eligible grids — unpreempted at EVERY
+    quantum cell, warm bitstream cache (`stackdist_eligible`) — collapse
+    the K x L grid into one stack-distance pass per fleet (quantum cells
+    are then identical by construction and broadcast); everything else runs
+    the jitted vmap^4 of `lax.scan`s, where slot counts sweep by masking
+    one max-size disambiguator (`slots.lookup`'s `num_active`).  `path`
+    forces a specific engine ("stackdist" raises if the grid is
+    ineligible); both return bit-for-bit identical results on eligible
+    grids.
     """
     fleets = jnp.asarray(fleets, jnp.int32)
-    table = fleet_tag_table(scenarios, fleets.shape[1])
+    if fleets.ndim != 3:
+        raise ValueError(
+            f"sweep_fleet expects (B, P, N) fleet traces, got shape "
+            f"{tuple(fleets.shape)}")
+    num_progs = fleets.shape[1]
+    table = fleet_tag_table(scenarios, num_progs)
     counts = jnp.asarray(slot_counts, jnp.int32).reshape(-1)
     lats = jnp.asarray(miss_latencies, jnp.int32).reshape(-1)
+    if quanta is None:
+        quanta_grid = sched.quanta(num_progs)[None, :]          # (1, P)
+    else:
+        if np.isscalar(quanta) or getattr(quanta, "ndim", None) == 0:
+            raise ValueError(
+                f"quanta must be a sequence of quantum cells (scalars or "
+                f"per-program vectors), got bare scalar {quanta!r} — pass "
+                f"quanta=[{quanta!r}] for a single-cell axis")
+        quanta = list(quanta)
+        if not quanta:
+            raise ValueError("quanta needs at least one quantum cell")
+        quanta_grid = np.stack([quanta_vector(q, num_progs) for q in quanta])
     eligible = stackdist_eligible(
-        table[0], quantum_cycles=sched.quantum_cycles,
+        table[0], quantum_cycles=quanta_grid,
         bs_entries=bs_cache_entries,
         max_miss_latency=int(np.max(np.asarray(miss_latencies))),
         bs_miss_extra=bs_miss_extra, total_steps=total_steps)
     if _check_path(path, eligible) == "stackdist":
-        return _sweep_fleet_stackdist(fleets, table, lats, counts,
-                                      bs_miss_extra, total_steps)
+        res = _sweep_fleet_stackdist(fleets, table, lats, counts,
+                                     bs_miss_extra, total_steps)
+        if quanta is None:
+            return res
+        # every quantum cell is unpreempted, so cells are identical:
+        # broadcast the one reconstructed grid over the quantum axis
+        q = quanta_grid.shape[0]
+        return FleetResult(*(jnp.broadcast_to(x[None], (q,) + x.shape)
+                             for x in res))
     s_max = int(np.max(np.asarray(slot_counts)))
-    return _sweep_fleet(
-        fleets, table, lats, counts, jnp.int32(sched.quantum_cycles),
+    res = _sweep_fleet(
+        fleets, table, lats, counts, jnp.asarray(quanta_grid),
+        jnp.asarray(sched.schedule(num_progs)),
         jnp.int32(sched.handler_cycles), s_max, bs_cache_entries,
         jnp.int32(bs_miss_extra), total_steps, scan_unroll)
+    if quanta is None:
+        return FleetResult(*(x[0] for x in res))
+    return res
 
 
 # --- pair path: the P=2 special case, kept as thin wrappers so the Fig. 7
@@ -533,16 +676,22 @@ def simulate_pair_batch(traces: np.ndarray, cfg: ReconfigConfig,
 # ---------------------------------------------------------------------------
 
 
-def fixed_fleet_cpi(mix: Mix, spec: isa.Spec, sched: SchedulerConfig) -> float:
+def fixed_fleet_cpi(mix: Mix, spec: isa.Spec, sched: SchedulerConfig,
+                    program_index: int = 0) -> float:
     """CPI of a fixed-ISA machine inside a round-robin fleet (any P).
 
     The handler executes `handler_cycles` of base instructions once per
     quantum; amortised per original instruction that is
     handler * CPI / quantum — independent of how many programs share the
-    core, since every program pays it once per own quantum.
+    core, since every program pays it once per own quantum.  Priority
+    weights don't change CPI either (they change wall-clock share, not
+    per-instruction cost).  With heterogeneous quanta, pass the program's
+    index so its own quantum amortises the handler.
     """
     cpi = analytic_cpi(mix, spec)
-    return cpi * (1.0 + sched.handler_cycles / sched.quantum_cycles)
+    q = np.asarray(sched.quantum_cycles).reshape(-1)
+    quantum = int(q[program_index if q.size > 1 else 0])
+    return cpi * (1.0 + sched.handler_cycles / quantum)
 
 
 # historical name from the pair-only simulator; the formula never depended

@@ -23,6 +23,7 @@ granularity over the `repro.core.isa` alphabet, then consumed by jitted
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field, replace
 
 import numpy as np
@@ -262,7 +263,9 @@ def build_trace(name: str, length: int = 200_000, seed: int = 0) -> np.ndarray:
     """
     bench = BENCHES[name]
     mix = mix_of(name)
-    rng = np.random.default_rng(hash((name, seed)) % (2**32))
+    # crc32, not hash(): str hashing is PYTHONHASHSEED-randomised, and traces
+    # must be identical across processes (golden pins, PR-over-PR benchmarks)
+    rng = np.random.default_rng(zlib.crc32(f"{name}:{seed}".encode()))
 
     sb_len = max(int(bench.cold_event_period), 24)
     hot = [g for g in bench.hot_f_groups if mix.frac[isa.GROUP_ID[g]] > 0]

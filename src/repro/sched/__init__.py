@@ -1,0 +1,37 @@
+"""repro.sched — scheduling policy, contention-aware placement & admission.
+
+Layer 2 of the multi-program scheduling subsystem.  Layer 1 (the simulator)
+models *how* co-resident programs share one reconfigurable core —
+heterogeneous quanta and weighted round-robin priorities, swept as grid
+axes by `repro.core.simulator.sweep_fleet`.  This package decides *which*
+programs should share a core in the first place:
+
+  * `policy`    — named scheduling policies (uniform / weighted /
+                  foreground-background) that compile down to
+                  `SchedulerConfig`s, plus quantum-grid builders for the
+                  sweep's quanta axis;
+  * `placement` — `ContentionModel` batch-predicts per-tenant slowdowns for
+                  candidate co-residency groups through `sweep_fleet`, and
+                  `place_tenants` assigns T tenants to C cores with greedy
+                  seeding + swap local search minimising predicted
+                  worst-tenant (then mean) contention;
+  * `admission` — `AdmissionController` wraps placement with an
+                  admit/defer decision at a slowdown SLO; the serve layer
+                  (`repro.serve.engine.SlotServeEngine.plan_coresidency`)
+                  uses it to pick co-residents instead of taking tenant
+                  order as given.
+"""
+from repro.sched.admission import AdmissionController, AdmissionDecision
+from repro.sched.placement import (ContentionModel, Placement,
+                                   PlacementConfig, fifo_placement,
+                                   place_tenants, random_placement,
+                                   score_placement)
+from repro.sched.policy import PriorityPolicy, quantum_grid
+
+__all__ = [
+    "AdmissionController", "AdmissionDecision",
+    "ContentionModel", "Placement", "PlacementConfig",
+    "fifo_placement", "place_tenants", "random_placement",
+    "score_placement",
+    "PriorityPolicy", "quantum_grid",
+]

@@ -74,6 +74,7 @@ class SlotServeEngine:
             hit_bias=engine_cfg.hit_bias)
         self.shard_states = [es.init_state(self.slot_cfg)
                              for _ in range(engine_cfg.expert_shards)]
+        self.deferred: list[Tenant] = []   # tenants parked by admission
         self.stats = {"fills": 0, "accesses": 0, "fill_seconds": 0.0,
                       "steps": 0, "per_tenant": {t.name: 0 for t in tenants}}
         for t in tenants:
@@ -159,7 +160,56 @@ class SlotServeEngine:
         return estimate_fleet_contention(benches, **kw)
 
     # ------------------------------------------------------------------
+    def plan_coresidency(self, tenant_benches: dict[str, str], *,
+                         slo: float = 1.5, num_cores: int = 1,
+                         model=None, max_rounds: int = 8):
+        """Contention-aware admission plan for this engine's tenant set.
+
+        Instead of taking tenant order as given, ask `repro.sched` which
+        tenants should co-reside: tenants are placed onto `num_cores`
+        model replicas minimising predicted worst-tenant slot contention,
+        and any tenant whose best placement still violates the slowdown
+        `slo` is deferred.  Returns the `AdmissionDecision`; use
+        `apply_admission` to restrict this engine to one core's residents.
+        """
+        from repro.sched.admission import AdmissionController
+        from repro.sched.placement import ContentionModel, PlacementConfig
+
+        if model is None:
+            model = ContentionModel(
+                PlacementConfig(num_slots=self.ecfg.slots_per_shard))
+        ctrl = AdmissionController(slo=slo, num_cores=num_cores,
+                                   model=model, max_rounds=max_rounds)
+        return ctrl.decide({t.name: tenant_benches[t.name]
+                            for t in self.tenants})
+
+    def apply_admission(self, decision, core: int = 0) -> list[Tenant]:
+        """Keep only `core`'s admitted co-residents; park everything else.
+
+        Deferred (and other-core) tenants move to `self.deferred` so the
+        caller can serve them in a later round or on another replica.
+        Returns the retained tenant list (in placement order).
+        """
+        keep_names: tuple[str, ...] = ()
+        if decision.placement is not None:
+            if not 0 <= core < len(decision.placement.cores):
+                raise ValueError(
+                    f"core index {core} out of range for a placement with "
+                    f"{len(decision.placement.cores)} cores")
+            keep_names = decision.placement.cores[core]
+        by_name = {t.name: t for t in self.tenants}
+        keep = [by_name[n] for n in keep_names if n in by_name]
+        kept = {t.name for t in keep}
+        self.deferred += [t for t in self.tenants if t.name not in kept]
+        self.tenants = keep
+        return keep
+
+    # ------------------------------------------------------------------
     def run(self, total_steps: int) -> dict:
+        if not self.tenants:
+            raise ValueError(
+                "engine has no resident tenants (all deferred by "
+                "admission?) — nothing to serve")
         ti = 0
         quantum_left = self.ecfg.quantum_tokens
         for _ in range(total_steps):
@@ -186,8 +236,9 @@ class SlotServeEngine:
 
 def estimate_fleet_contention(benches: list[str], *, num_slots: int = 4,
                               miss_latency: int = 50,
-                              quantum_cycles: int = 20_000,
+                              quantum_cycles=20_000,
                               handler_cycles: int = 150,
+                              priorities=None,
                               scenarios=None,
                               trace_len: int = 60_000,
                               total_steps: int = 160_000) -> dict:
@@ -202,14 +253,17 @@ def estimate_fleet_contention(benches: list[str], *, num_slots: int = 4,
     fleet-level switch/miss counters.
 
     `scenarios` may be one `SlotScenario` or a per-tenant list (tenants can
-    disagree about which opcodes are slotted).
+    disagree about which opcodes are slotted).  `quantum_cycles` may be a
+    per-tenant vector and `priorities` a per-tenant weight tuple — the
+    heterogeneous-quantum / weighted-round-robin axes of `SchedulerConfig`.
     """
     if scenarios is None:
         scenarios = isa.SCENARIO_2
     cfg = simulator.ReconfigConfig(num_slots=num_slots,
                                    miss_latency=miss_latency)
     sched = simulator.SchedulerConfig(quantum_cycles=quantum_cycles,
-                                      handler_cycles=handler_cycles)
+                                      handler_cycles=handler_cycles,
+                                      priorities=priorities)
     tr = np.stack([core_traces.build_trace(n, trace_len) for n in benches])
     fleet = simulator.simulate_many(tr, cfg, scenarios, sched, total_steps)
 
