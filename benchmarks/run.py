@@ -106,6 +106,14 @@ def bench_placement_study():
     return lines, head[2:]
 
 
+def bench_online_churn():
+    """Warm-state-aware online re-placement vs never/always baselines."""
+    from benchmarks import online_churn
+    lines, _ = online_churn.run()
+    head = [l for l in lines if l.startswith("# finding")][0]
+    return lines, head[2:]
+
+
 BENCHES = {
     "fig4_extensions": bench_fig4,
     "fig5_classification": bench_fig5,
@@ -118,6 +126,7 @@ BENCHES = {
     "roofline_table": bench_roofline,
     "perf_sweep": bench_perf_sweep,
     "placement_study": bench_placement_study,
+    "online_churn": bench_online_churn,
 }
 
 

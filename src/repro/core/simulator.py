@@ -46,6 +46,16 @@ Two execution paths serve the sweep entry points (`sweep_fleet`,
 
 Callers can force a path with `path="scan"`/`"stackdist"` (parity tests do);
 the default `"auto"` routes eligible sweeps through stack distance.
+
+The scan's carry is an explicit, resumable value (`FleetState`):
+`simulate_many(..., state=S, return_state=True)` runs N steps from S and
+returns (results, S'), with the one-shot run being the
+`S = init_fleet_state(...)` special case — split-at-any-step resume is
+bit-for-bit equal to the unsplit run.  This is what lets the online
+serving layer (`repro.sched.online`) carry warm slot/bitstream caches
+across epochs and price tenant migration by resuming a tenant on a cold
+core.  Resumed segments always take the scan path; the stack-distance
+fast path stays one-shot-only.
 """
 from __future__ import annotations
 
@@ -62,7 +72,8 @@ from repro.core.traces import Mix, analytic_cpi  # re-export for callers
 
 __all__ = [
     "ReconfigConfig", "SchedulerConfig", "SimResult", "PairResult",
-    "FleetResult", "fleet_tag_table", "stackdist_eligible",
+    "FleetResult", "FleetState", "init_fleet_state",
+    "fleet_tag_table", "stackdist_eligible",
     "quanta_vector", "priority_schedule",
     "simulate_single", "simulate_single_batch",
     "simulate_many", "sweep_fleet",
@@ -249,7 +260,7 @@ def _simulate_single(trace, instr_tag, miss_latency, num_slots: int,
     wrapper so disambiguator/bitstream accounting cannot drift between the
     Fig. 6 (single) and Fig. 7 (multi-program) experiments.
     """
-    r = _simulate_fleet_impl(
+    r, _ = _simulate_fleet_impl(
         trace[None, :], instr_tag[None, :], miss_latency,
         jnp.int32(num_slots),
         jnp.full((1,), NO_PREEMPT_QUANTUM, jnp.int32),
@@ -353,6 +364,92 @@ class FleetResult(NamedTuple):
         return self.cycles / jnp.maximum(self.instructions, 1)
 
 
+class FleetState(NamedTuple):
+    """The fleet scan's carry as an explicit, resumable value.
+
+    `simulate_many` is "run N steps from state S -> (results, S')": the
+    one-shot run is the `S = init_fleet_state(...)` special case, and
+    feeding S' back in continues the simulation bit-for-bit — a run split
+    at any step boundary equals the unsplit run exactly (cache contents,
+    LRU clocks, scheduler cursor and all counters are part of the state).
+
+    Counters (`cycles` .. `switches`) are *cumulative since the state was
+    initialised*, so a resumed segment's `FleetResult` reports run totals;
+    zero them (`reset_counters`) to measure one segment in isolation.
+    The slot/bitstream caches are the warm state the paper's architecture
+    preserves across context switches (§IV) — `repro.sched.online` carries
+    them across serving epochs and prices tenant migration by resuming a
+    tenant's state on a cold core.
+    """
+
+    slot_st: slots.SlotState   # disambiguator (shared by the fleet)
+    bs_st: slots.SlotState     # bitstream cache
+    cursors: jnp.ndarray       # (P,) per-program trace cursor
+    sched_idx: jnp.ndarray     # () cursor into the priority schedule
+    q_cycles: jnp.ndarray      # () cycles burnt in the current quantum
+    cycles: jnp.ndarray        # (P,) attributed cycles (incl. handler)
+    instrs: jnp.ndarray        # (P,)
+    misses: jnp.ndarray        # (P,) disambiguator misses
+    bs_misses: jnp.ndarray     # (P,) bitstream-cache misses
+    switches: jnp.ndarray      # () context switches
+
+    @property
+    def num_programs(self) -> int:
+        return self.cursors.shape[0]
+
+    def result(self) -> "FleetResult":
+        """The cumulative counters viewed as a FleetResult."""
+        return FleetResult(self.cycles, self.instrs, self.misses,
+                           self.bs_misses, self.switches)
+
+    def reset_counters(self) -> "FleetState":
+        """Zero the counters, keeping caches/cursors — the next segment's
+        FleetResult then reports that segment alone."""
+        z = jnp.zeros_like
+        return self._replace(cycles=z(self.cycles), instrs=z(self.instrs),
+                             misses=z(self.misses),
+                             bs_misses=z(self.bs_misses),
+                             switches=z(self.switches))
+
+
+def init_fleet_state(num_programs: int, num_slots: int,
+                     bs_entries: int = 64) -> FleetState:
+    """Cold-start state for a fleet of P programs (empty caches, step 0)."""
+    if num_programs < 1:
+        raise ValueError(f"num_programs must be >= 1, got {num_programs}")
+    return FleetState(
+        slot_st=slots.init(num_slots),
+        bs_st=slots.init(bs_entries),
+        cursors=jnp.zeros((num_programs,), jnp.int32),
+        sched_idx=jnp.int32(0),
+        q_cycles=jnp.int32(0),
+        cycles=jnp.zeros((num_programs,), jnp.int32),
+        instrs=jnp.zeros((num_programs,), jnp.int32),
+        misses=jnp.zeros((num_programs,), jnp.int32),
+        bs_misses=jnp.zeros((num_programs,), jnp.int32),
+        switches=jnp.int32(0),
+    )
+
+
+def _check_fleet_state(state: FleetState, num_programs: int,
+                       num_slots: int, bs_entries: int) -> None:
+    if state.cursors.shape != (num_programs,):
+        raise ValueError(
+            f"FleetState carries {state.cursors.shape[0]} program cursors, "
+            f"but the traces describe a fleet of P={num_programs} programs")
+    if state.slot_st.tags.shape[0] != num_slots:
+        raise ValueError(
+            f"FleetState disambiguator has {state.slot_st.tags.shape[0]} "
+            f"slots, but the config allocates num_slots={num_slots} — "
+            f"resume must use the same slot geometry it was initialised "
+            f"with")
+    if state.bs_st.tags.shape[0] != bs_entries:
+        raise ValueError(
+            f"FleetState bitstream cache has {state.bs_st.tags.shape[0]} "
+            f"entries, but the config allocates "
+            f"bs_cache_entries={bs_entries}")
+
+
 def fleet_tag_table(scenarios, num_programs: int) -> np.ndarray:
     """(P, NUM_INSTRUCTIONS) per-program disambiguator-tag table.
 
@@ -397,20 +494,20 @@ def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quanta,
     trace_len = ptags.shape[1]
     sched_len = schedule.shape[0]
 
-    def step(c, _):
-        p = schedule[c["sched_idx"]]
-        i = jnp.remainder(c["cursors"][p], trace_len)
+    def step(c: FleetState, _):
+        p = schedule[c.sched_idx]
+        i = jnp.remainder(c.cursors[p], trace_len)
         tag = ptags[p, i]
         # on a disambiguator miss the bitstream is fetched through the
         # bitstream cache; a miss there goes to the unified L2 (extra cost)
         slot_st, bs_st, hit, bs_hit = slots.lookup_fused(
-            c["slot_st"], c["bs_st"], tag, active_slots)
+            c.slot_st, c.bs_st, tag, active_slots)
         cost = pcosts[p, i]
         cost = cost + jnp.where(hit, 0, miss_latency).astype(jnp.int32)
         cost = cost + jnp.where(hit | bs_hit, 0,
                                 bs_miss_extra).astype(jnp.int32)
 
-        q = c["q_cycles"] + cost
+        q = c.q_cycles + cost
         do_switch = q >= quanta[p]
         # the outgoing program pays the interrupt-handler cycles, mirroring
         # the paper's observation that short quanta inflate all runtimes
@@ -418,21 +515,21 @@ def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quanta,
 
         # slot/bitstream state deliberately persists across the switch —
         # shared extensions stay resident (the architecture's point, §IV)
-        return {
-            "slot_st": slot_st,
-            "bs_st": bs_st,
-            "cursors": c["cursors"].at[p].add(1),
-            "sched_idx": jnp.where(do_switch,
-                                   (c["sched_idx"] + 1) % sched_len,
-                                   c["sched_idx"]),
-            "q_cycles": jnp.where(do_switch, 0, q),
-            "cycles": c["cycles"].at[p].add(cost_p),
-            "instrs": c["instrs"].at[p].add(1),
-            "misses": c["misses"].at[p].add((~hit).astype(jnp.int32)),
-            "bs_misses": c["bs_misses"].at[p].add(
+        return FleetState(
+            slot_st=slot_st,
+            bs_st=bs_st,
+            cursors=c.cursors.at[p].add(1),
+            sched_idx=jnp.where(do_switch,
+                                (c.sched_idx + 1) % sched_len,
+                                c.sched_idx),
+            q_cycles=jnp.where(do_switch, 0, q),
+            cycles=c.cycles.at[p].add(cost_p),
+            instrs=c.instrs.at[p].add(1),
+            misses=c.misses.at[p].add((~hit).astype(jnp.int32)),
+            bs_misses=c.bs_misses.at[p].add(
                 (~(hit | bs_hit)).astype(jnp.int32)),
-            "switches": c["switches"] + do_switch.astype(jnp.int32),
-        }, None
+            switches=c.switches + do_switch.astype(jnp.int32),
+        ), None
 
     return step
 
@@ -440,13 +537,17 @@ def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quanta,
 def _simulate_fleet_impl(traces, tag_table, miss_latency, active_slots,
                          quanta, schedule, handler, num_slots: int,
                          bs_entries: int, bs_miss_extra, total_steps: int,
-                         scan_unroll: int = SCAN_UNROLL) -> FleetResult:
-    """(P, N) traces + (P, num_opcodes) tags -> per-program FleetResult.
+                         scan_unroll: int = SCAN_UNROLL,
+                         state: FleetState | None = None
+                         ) -> tuple[FleetResult, FleetState]:
+    """(P, N) traces + (P, num_opcodes) tags -> (FleetResult, FleetState).
 
     `num_slots` is the *allocated* (static) disambiguator size;
     `active_slots` (traced) masks it down so slot count is a sweep axis.
     `quanta` is the (P,) per-program quantum vector; `schedule` the
-    weighted round-robin turn order (see `priority_schedule`).
+    weighted round-robin turn order (see `priority_schedule`).  `state`
+    resumes the scan from a prior carry (None = cold init); the returned
+    state carries the run's full warm state for further resumption.
     """
     hw = jnp.asarray(isa.INSTR_HW_CYCLES, jnp.int32)
     tags = jnp.asarray(tag_table, jnp.int32)
@@ -457,24 +558,13 @@ def _simulate_fleet_impl(traces, tag_table, miss_latency, active_slots,
     ptags = jnp.take_along_axis(tags, traces, axis=1)
     pcosts = hw[traces]
 
-    init = {
-        "slot_st": slots.init(num_slots),
-        "bs_st": slots.init(bs_entries),
-        "cursors": jnp.zeros((num_progs,), jnp.int32),
-        "sched_idx": jnp.int32(0),
-        "q_cycles": jnp.int32(0),
-        "cycles": jnp.zeros((num_progs,), jnp.int32),
-        "instrs": jnp.zeros((num_progs,), jnp.int32),
-        "misses": jnp.zeros((num_progs,), jnp.int32),
-        "bs_misses": jnp.zeros((num_progs,), jnp.int32),
-        "switches": jnp.int32(0),
-    }
+    init = (init_fleet_state(num_progs, num_slots, bs_entries)
+            if state is None else state)
     step = _fleet_step_fn(ptags, pcosts, miss_latency, active_slots,
                           quanta, schedule, handler, bs_miss_extra)
     final, _ = jax.lax.scan(step, init, None, length=total_steps,
                             unroll=scan_unroll)
-    return FleetResult(final["cycles"], final["instrs"], final["misses"],
-                       final["bs_misses"], final["switches"])
+    return final.result(), final
 
 
 _simulate_fleet = functools.partial(
@@ -485,7 +575,9 @@ _simulate_fleet = functools.partial(
 def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                   scenarios, sched: SchedulerConfig,
                   total_steps: int = 400_000,
-                  scan_unroll: int = SCAN_UNROLL) -> FleetResult:
+                  scan_unroll: int = SCAN_UNROLL, *,
+                  state: FleetState | None = None,
+                  return_state: bool = False):
     """Round-robin fleet of P programs sharing one reconfigurable core.
 
     traces: (P, N) int32 instruction ids; `scenarios` is one shared
@@ -493,6 +585,15 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
     `sched` may carry per-program quanta and/or priority weights
     (`SchedulerConfig`); the uniform unit-priority case reproduces the
     paper's round-robin bit-for-bit.
+
+    The scan carry is an explicit value: `state` resumes a prior run's
+    `FleetState` (None = cold start), and `return_state=True` additionally
+    returns the final state, making the call "run `total_steps` from S ->
+    (results, S')".  A run split at any step boundary reproduces the
+    one-shot run bit-for-bit (counters are cumulative in the state).  The
+    resumed path always takes the cycle-by-cycle scan — the stack-distance
+    fast path stays one-shot-only (`stackdist_eligible` assumes cold,
+    complete runs) and `simulate_many` never dispatches it.
     """
     traces = jnp.asarray(traces, jnp.int32)
     if traces.ndim != 2:
@@ -501,14 +602,26 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
             f"{tuple(traces.shape)}")
     num_progs = traces.shape[0]
     table = fleet_tag_table(scenarios, num_progs)
-    return _simulate_fleet(
+    schedule = sched.schedule(num_progs)
+    if state is not None:
+        _check_fleet_state(state, num_progs, cfg.num_slots,
+                           cfg.bs_cache_entries)
+        if int(state.sched_idx) >= schedule.shape[0]:
+            raise ValueError(
+                f"FleetState scheduler cursor {int(state.sched_idx)} is "
+                f"out of range for a priority schedule of length "
+                f"{schedule.shape[0]} — resume must use a SchedulerConfig "
+                f"whose priority weights produce a schedule at least as "
+                f"long as the one the state was built under")
+    res, final = _simulate_fleet(
         traces, table, jnp.int32(cfg.miss_latency),
         jnp.int32(cfg.num_slots),
         jnp.asarray(sched.quanta(num_progs)),
-        jnp.asarray(sched.schedule(num_progs)),
+        jnp.asarray(schedule),
         jnp.int32(sched.handler_cycles), cfg.num_slots,
         cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra), total_steps,
-        scan_unroll)
+        scan_unroll, state)
+    return (res, final) if return_state else res
 
 
 @functools.partial(
@@ -521,7 +634,7 @@ def _sweep_fleet(fleets, tag_table, miss_latencies, slot_counts, quanta,
     def one(t, s, lat, qv):
         return _simulate_fleet_impl(
             t, tag_table, lat, s, qv, schedule, handler, num_slots,
-            bs_entries, bs_miss_extra, total_steps, scan_unroll)
+            bs_entries, bs_miss_extra, total_steps, scan_unroll)[0]
 
     f = jax.vmap(one, in_axes=(None, None, 0, None))   # miss-latency axis
     f = jax.vmap(f, in_axes=(None, 0, None, None))     # slot-count axis

@@ -174,3 +174,12 @@ def occupancy(state: SlotState) -> jnp.ndarray:
 def resident(state: SlotState, tag: jnp.ndarray) -> jnp.ndarray:
     """Non-mutating residency probe (no LRU touch)."""
     return jnp.any(state.tags == jnp.asarray(tag, jnp.int32)) & (tag >= 0)
+
+
+def resident_many(state: SlotState, tags: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized `resident`: (T,) bool residency per probed tag, no LRU
+    touch.  Used by the online re-placement layer to measure how much of a
+    tenant's slotted working set is still warm in a core's disambiguator
+    (the fraction a migration to a cold core would have to re-fault)."""
+    tags = jnp.asarray(tags, jnp.int32)
+    return jnp.any(state.tags[None, :] == tags[:, None], axis=1) & (tags >= 0)

@@ -16,12 +16,23 @@ programs should share a core in the first place:
                   seeding + swap local search minimising predicted
                   worst-tenant (then mean) contention;
   * `admission` — `AdmissionController` wraps placement with an
-                  admit/defer decision at a slowdown SLO; the serve layer
+                  admit/defer decision at a slowdown SLO (per-tenant SLO
+                  weights bias the deferral order so foreground tenants
+                  are protected); the serve layer
                   (`repro.serve.engine.SlotServeEngine.plan_coresidency`)
                   uses it to pick co-residents instead of taking tenant
-                  order as given.
+                  order as given;
+  * `online`    — `OnlineReplacer` serves an arrival/departure event
+                  stream in epochs over the resumable fleet state
+                  (`simulator.FleetState`), re-solving placement each
+                  epoch and pricing each move as predicted contention
+                  delta minus a *measured* warm-state migration penalty
+                  (resume-on-cold-core probe);
+                  `SlotServeEngine.serve_online` is the serving entry.
 """
 from repro.sched.admission import AdmissionController, AdmissionDecision
+from repro.sched.online import (OnlineConfig, OnlineReplacer, OnlineReport,
+                                TenantEvent)
 from repro.sched.placement import (ContentionModel, Placement,
                                    PlacementConfig, fifo_placement,
                                    place_tenants, random_placement,
@@ -33,5 +44,6 @@ __all__ = [
     "ContentionModel", "Placement", "PlacementConfig",
     "fifo_placement", "place_tenants", "random_placement",
     "score_placement",
+    "OnlineConfig", "OnlineReplacer", "OnlineReport", "TenantEvent",
     "PriorityPolicy", "quantum_grid",
 ]

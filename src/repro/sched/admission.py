@@ -8,6 +8,9 @@ when the SLO is violated — defers the most contended tenant and re-places
 the rest, iterating until the remaining set fits (or nothing does).
 Deferred tenants are reported so the serve layer can queue them for a later
 round instead of letting one bad co-residency blow every tenant's latency.
+Per-tenant SLO weights (`decide(..., slo_weights=...)`) bias the deferral
+order so foreground tenants are protected and batch tenants absorb the
+contention.
 
 This is the serving-level realisation of the ROADMAP item "wire
 `estimate_fleet_contention` into serve admission control": predictions come
@@ -34,6 +37,7 @@ class AdmissionDecision:
     placement: Placement | None        # placement of the admitted set
     predicted_worst: float             # nan when nothing was admitted
     slo: float
+    slo_weights: dict | None = None    # per-tenant weights used (if any)
 
     @property
     def admitted_all(self) -> bool:
@@ -68,10 +72,31 @@ class AdmissionController:
         self.model = model or ContentionModel()
         self.max_rounds = max_rounds
 
-    def decide(self, tenants: dict[str, str]) -> AdmissionDecision:
+    def decide(self, tenants: dict[str, str],
+               slo_weights: dict[str, float] | None = None
+               ) -> AdmissionDecision:
         """tenants: name -> benchmark profile.  Defers greedily: while the
-        best placement still violates the SLO, the tenant with the worst
-        predicted slowdown is deferred and the rest are re-placed."""
+        best placement still violates the SLO, a victim is deferred and the
+        rest are re-placed.
+
+        `slo_weights` (optional, name -> positive weight, default 1.0)
+        makes the deferral priority-aware: the victim maximises the
+        *weighted violation* `predicted_slowdown / weight`, so a heavy
+        foreground tenant (weight 4) tolerates 4x the contention of a unit
+        batch tenant before it becomes the deferral candidate — foreground
+        tenants are protected while batch tenants absorb the contention.
+        The admit condition itself stays the unweighted worst-slowdown SLO
+        (an admitted set must be good for everyone it serves).
+        """
+        weights = dict(slo_weights or {})
+        for n, w in weights.items():
+            if n not in tenants:
+                raise ValueError(
+                    f"slo_weights names unknown tenant {n!r} (offered: "
+                    f"{sorted(tenants)})")
+            if not w > 0:
+                raise ValueError(
+                    f"slo_weights must be positive, got {w!r} for {n!r}")
         work = dict(tenants)
         deferred: list[str] = []
         while work:
@@ -82,10 +107,12 @@ class AdmissionController:
                 return AdmissionDecision(
                     admitted=admitted, deferred=tuple(deferred),
                     placement=pl, predicted_worst=pl.worst_slowdown,
-                    slo=self.slo)
-            victim = max(work, key=lambda n: (pl.tenant_slowdown[n], n))
+                    slo=self.slo, slo_weights=slo_weights)
+            victim = max(work, key=lambda n: (
+                pl.tenant_slowdown[n] / weights.get(n, 1.0), n))
             deferred.append(victim)
             del work[victim]
         return AdmissionDecision(admitted=(), deferred=tuple(deferred),
                                  placement=None,
-                                 predicted_worst=math.nan, slo=self.slo)
+                                 predicted_worst=math.nan, slo=self.slo,
+                                 slo_weights=slo_weights)

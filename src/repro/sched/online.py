@@ -1,0 +1,491 @@
+"""Online re-placement: epoch-structured serving with warm-state-aware
+tenant migration.
+
+The static placement layer (`repro.sched.placement`) answers "which tenants
+should co-reside" once, for a fixed roster.  Real serving rosters churn:
+tenants arrive and leave mid-serve, and every arrival/departure can turn a
+good placement into a bad one.  This module serves a churn workload as a
+sequence of *epochs* over the resumable fleet simulator
+(`repro.core.simulator.FleetState`):
+
+  * each reconfigurable core carries its disambiguator + bitstream cache
+    across epochs AND across membership changes — warm state persists on
+    the core, which is the paper's architectural point (§IV) and exactly
+    what makes migration expensive: a tenant moved to another core leaves
+    its resident slots behind;
+  * each epoch the `OnlineReplacer` re-solves placement for the current
+    roster through the `ContentionModel` (`place_tenants`), aligns the
+    solution to the physical cores by membership overlap, and prices every
+    implied move as
+
+        net = predicted-contention-delta  -  warm-state migration penalty
+
+    where the contention delta converts predicted slowdown changes of every
+    affected tenant into cycles over the next epoch, and the migration
+    penalty is *measured*, not modelled: the mover's state is resumed for a
+    probe window twice — once on its current (warm) core and once on a cold
+    core — and the penalty is the cycle difference (LUTstructions'
+    re-loading cost as a first-class quantity);
+  * policy "warm" applies only net-positive moves; the baselines are
+    "never" (arrival placement is final) and "always" (apply every move the
+    re-solve implies, blind to migration cost).
+
+`benchmarks/online_churn.py` shows warm-aware re-placement matching or
+beating never-migrate on worst-tenant slowdown while migrating less than
+always-rebalance; `repro.serve.engine.SlotServeEngine.serve_online` wires
+the loop into the serving layer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulator, slots
+from repro.sched.placement import (ContentionModel, PlacementConfig,
+                                   place_tenants)
+
+__all__ = [
+    "TenantEvent", "OnlineConfig", "OnlineReport", "OnlineReplacer",
+    "POLICIES",
+]
+
+POLICIES = ("never", "always", "warm")
+
+
+@dataclass(frozen=True)
+class TenantEvent:
+    """One roster change: a tenant arriving (with its bench profile) or
+    departing.  Within an epoch, departures apply before arrivals."""
+
+    epoch: int
+    kind: str                 # "arrive" | "depart"
+    name: str
+    bench: str | None = None  # required for "arrive"
+
+    def __post_init__(self):
+        if self.kind not in ("arrive", "depart"):
+            raise ValueError(
+                f"event kind must be 'arrive' or 'depart', got "
+                f"{self.kind!r}")
+        if self.kind == "arrive" and not self.bench:
+            raise ValueError(
+                f"arrival of {self.name!r} needs a bench profile")
+        if self.epoch < 0:
+            raise ValueError(f"event epoch must be >= 0, got {self.epoch}")
+
+
+@dataclass(frozen=True)
+class OnlineConfig:
+    """Knobs of the epoch loop.
+
+    `epoch_steps` is the scan budget every non-empty core advances per
+    epoch (its round-robin shares it between residents); `probe_steps` the
+    resume window of the migration-penalty measurement.  `placement`
+    carries the simulator geometry (slots, miss latency, quantum) shared
+    by the epoch scans, the contention model, and the probes.
+    """
+
+    num_cores: int = 2
+    epoch_steps: int = 6_000
+    probe_steps: int = 2_000
+    # soft per-epoch migration bound: no new exchange unit starts once this
+    # many tenants moved (an atomic cycle may overshoot by its length - 1)
+    max_moves_per_epoch: int = 4
+    bs_cache_entries: int = 64
+    bs_miss_extra: int = 100
+    placement: PlacementConfig = field(default_factory=PlacementConfig)
+
+    def __post_init__(self):
+        if self.num_cores < 1:
+            raise ValueError(f"num_cores must be >= 1, got {self.num_cores}")
+        if self.epoch_steps < 1 or self.probe_steps < 1:
+            raise ValueError("epoch_steps and probe_steps must be >= 1")
+
+    def reconfig(self) -> simulator.ReconfigConfig:
+        return simulator.ReconfigConfig(
+            num_slots=self.placement.num_slots,
+            miss_latency=self.placement.miss_latency,
+            bs_cache_entries=self.bs_cache_entries,
+            bs_miss_extra=self.bs_miss_extra)
+
+
+class _TenantRun:
+    """Mutable service record of one tenant (cursor + cumulative counters
+    survive migrations; the slot caches do not — they belong to cores)."""
+
+    def __init__(self, name: str, bench: str, core: int):
+        self.name = name
+        self.bench = bench
+        self.core = core
+        self.cursor = 0
+        self.cycles = 0
+        self.instrs = 0
+        self.slot_misses = 0
+        self.migrations = 0
+
+
+class _Core:
+    """A physical reconfigurable core: persistent slot/bitstream caches."""
+
+    def __init__(self, cfg: OnlineConfig):
+        self.slot_st = slots.init(cfg.placement.num_slots)
+        self.bs_st = slots.init(cfg.bs_cache_entries)
+
+
+@dataclass
+class OnlineReport:
+    """Outcome of one `OnlineReplacer.run`."""
+
+    policy: str
+    epochs: int
+    migrations: int
+    per_tenant: dict                   # name -> service metrics
+    worst_slowdown: float
+    mean_slowdown: float
+    final_cores: tuple[tuple[str, ...], ...]
+    moves: list                        # per-move log dicts
+    epoch_log: list                    # per-epoch roster/migration rows
+
+
+class OnlineReplacer:
+    """Epoch-driven online placement over the resumable fleet simulator.
+
+    `policy`:
+      * "never"  — tenants stay where arrival placement put them;
+      * "always" — apply every move the per-epoch re-solve implies;
+      * "warm"   — apply a move only when its predicted contention saving
+        over the next epoch exceeds its *measured* warm-state migration
+        penalty (resume-on-cold-core probe).
+    """
+
+    def __init__(self, cfg: OnlineConfig | None = None,
+                 model: ContentionModel | None = None,
+                 policy: str = "warm"):
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}, expected one of {POLICIES}")
+        self.cfg = cfg or OnlineConfig()
+        self.model = model or ContentionModel(self.cfg.placement)
+        if self.model.cfg.num_slots != self.cfg.placement.num_slots:
+            raise ValueError(
+                f"contention model simulates {self.model.cfg.num_slots} "
+                f"slots but the online config serves "
+                f"{self.cfg.placement.num_slots} — predictions would price "
+                f"a different machine")
+        self.policy = policy
+        self.tenants: dict[str, _TenantRun] = {}
+        self.departed: list[_TenantRun] = []
+        self.cores = [_Core(self.cfg) for _ in range(self.cfg.num_cores)]
+        self.migrations = 0
+        self.moves: list[dict] = []
+
+    # ------------------------------------------------------------------
+    # roster bookkeeping
+    # ------------------------------------------------------------------
+    def _members(self, core: int) -> list[_TenantRun]:
+        return sorted((t for t in self.tenants.values() if t.core == core),
+                      key=lambda t: t.name)
+
+    def _groups(self) -> list[tuple[str, ...]]:
+        return [tuple(sorted(t.bench for t in self._members(c)))
+                for c in range(self.cfg.num_cores)]
+
+    def _arrive(self, name: str, bench: str) -> None:
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} arrived twice")
+        if any(t.name == name for t in self.departed):
+            raise ValueError(
+                f"tenant name {name!r} was already served and departed — "
+                f"service records are keyed by name, so a returning "
+                f"tenant needs a fresh name (e.g. {name!r}-2)")
+        self.model.trace(bench)            # validates the bench name
+        counts = [len(self._members(c)) for c in range(self.cfg.num_cores)]
+        open_cores = [c for c in range(self.cfg.num_cores)
+                      if counts[c] == min(counts)]
+        # among least-loaded cores, join the one whose resulting group
+        # predicts the best (worst, mean) slowdown — greedy, no migration
+        cand = [tuple(sorted([t.bench for t in self._members(c)] + [bench]))
+                for c in open_cores]
+        preds = self.model.predict(cand)
+        best = min(range(len(open_cores)),
+                   key=lambda i: (float(np.max(preds[i])),
+                                  float(np.mean(preds[i])), i))
+        self.tenants[name] = _TenantRun(name, bench, open_cores[best])
+
+    def _depart(self, name: str) -> None:
+        if name not in self.tenants:
+            raise ValueError(f"departure of unknown tenant {name!r}")
+        # the core keeps its caches — a departed tenant's residents decay
+        # naturally under LRU as the survivors run; the service record is
+        # archived so the final report scores every tenant ever served
+        self.departed.append(self.tenants.pop(name))
+
+    # ------------------------------------------------------------------
+    # epoch advance over resumable fleet state
+    # ------------------------------------------------------------------
+    def _advance_epoch(self) -> None:
+        pcfg = self.cfg.placement
+        sched = pcfg.scheduler()
+        rcfg = self.cfg.reconfig()
+        for ci in range(self.cfg.num_cores):
+            members = self._members(ci)
+            if not members:
+                continue
+            core = self.cores[ci]
+            tr = np.stack([np.asarray(self.model.trace(t.bench))
+                           for t in members])
+            st = simulator.init_fleet_state(
+                len(members), pcfg.num_slots, self.cfg.bs_cache_entries)
+            # resume: the core's caches are warm from every prior epoch
+            # (and from prior residents); cursors continue each tenant's
+            # own stream; counters start at zero -> per-epoch deltas
+            st = st._replace(
+                slot_st=core.slot_st, bs_st=core.bs_st,
+                cursors=jnp.asarray([t.cursor for t in members], jnp.int32))
+            res, st = simulator.simulate_many(
+                tr, rcfg,
+                [self.model.scenario_of(t.bench) for t in members],
+                sched, total_steps=self.cfg.epoch_steps,
+                state=st, return_state=True)
+            core.slot_st, core.bs_st = st.slot_st, st.bs_st
+            cursors = np.asarray(st.cursors)
+            cycles = np.asarray(res.cycles)
+            instrs = np.asarray(res.instructions)
+            misses = np.asarray(res.slot_misses)
+            for p, t in enumerate(members):
+                t.cursor = int(cursors[p])
+                t.cycles += int(cycles[p])
+                t.instrs += int(instrs[p])
+                t.slot_misses += int(misses[p])
+
+    # ------------------------------------------------------------------
+    # warm-state migration pricing
+    # ------------------------------------------------------------------
+    def migration_penalty(self, name: str) -> float:
+        """Measured cost (cycles) of restarting `name` on a cold core.
+
+        Resumes the tenant's state solo for `probe_steps` twice — from its
+        current core's warm caches and from a cold `init_fleet_state` —
+        and returns the cycle difference.  This is the LUTstructions
+        quantity: how many cycles of reconfiguration/bitstream re-loading
+        the destination core charges before the tenant is warm again.
+        """
+        t = self.tenants[name]
+        pcfg = self.cfg.placement
+        rcfg = self.cfg.reconfig()
+        scen = self.model.scenario_of(t.bench)
+        tr = np.asarray(self.model.trace(t.bench))[None, :]
+        cold = simulator.init_fleet_state(
+            1, pcfg.num_slots, self.cfg.bs_cache_entries)._replace(
+                cursors=jnp.asarray([t.cursor], jnp.int32))
+        warm = cold._replace(slot_st=self.cores[t.core].slot_st,
+                             bs_st=self.cores[t.core].bs_st)
+        sched = simulator.SchedulerConfig.no_preempt(pcfg.handler_cycles)
+        kw = dict(total_steps=self.cfg.probe_steps, return_state=False)
+        res_c = simulator.simulate_many(tr, rcfg, scen, sched,
+                                        state=cold, **kw)
+        res_w = simulator.simulate_many(tr, rcfg, scen, sched,
+                                        state=warm, **kw)
+        return float(int(res_c.cycles[0]) - int(res_w.cycles[0]))
+
+    def warm_fraction(self, name: str) -> float:
+        """Fraction of the tenant's slotted tag set resident on its core's
+        disambiguator right now (observability for the move log)."""
+        t = self.tenants[name]
+        tag_row = np.asarray(self.model.scenario_of(t.bench).instr_tag)
+        tags = np.unique(tag_row[np.asarray(self.model.trace(t.bench))])
+        tags = tags[tags >= 0]
+        if tags.size == 0:
+            return 1.0
+        res = slots.resident_many(self.cores[t.core].slot_st,
+                                  jnp.asarray(tags, jnp.int32))
+        return float(np.mean(np.asarray(res)))
+
+    def _group_cycles(self, group: tuple[str, ...]) -> float:
+        """Predicted cycles one epoch spends serving `group` on one core:
+        per-member slowdown x solo CPI x the member's round-robin share of
+        the epoch's step budget."""
+        if not group:
+            return 0.0
+        pred = self.model.predict([group])[0]
+        share = self.cfg.epoch_steps / len(group)
+        solo = np.array([self.model.solo_cpi(b) for b in sorted(group)])
+        return float(np.sum(pred * solo * share))
+
+    def move_benefit(self, moves: dict[str, int]) -> float:
+        """Predicted contention delta (cycles/epoch) of applying `moves`
+        (tenant name -> destination core) atomically: old-cost minus
+        new-cost summed over every affected core.  A cross-core swap must
+        be priced as one unit — each leg alone transits through a
+        lopsided group and would misprice the exchange."""
+        affected = {self.tenants[n].core for n in moves} | set(moves.values())
+        old = new = 0.0
+        for ci in range(self.cfg.num_cores):
+            if ci not in affected:
+                continue
+            cur = [t.bench for t in self._members(ci)]
+            nxt = [t.bench for t in self._members(ci)
+                   if t.name not in moves or moves[t.name] == ci]
+            nxt += [self.tenants[n].bench for n, dst in moves.items()
+                    if dst == ci and self.tenants[n].core != ci]
+            old += self._group_cycles(tuple(sorted(cur)))
+            new += self._group_cycles(tuple(sorted(nxt)))
+        return old - new
+
+    # ------------------------------------------------------------------
+    # per-epoch re-solve
+    # ------------------------------------------------------------------
+    def _target_assignment(self) -> dict[str, int]:
+        """Re-solve placement for the current roster and align the solved
+        cores to physical cores by membership overlap (a re-solve that
+        merely permutes core labels must imply zero moves)."""
+        roster = {t.name: t.bench for t in self.tenants.values()}
+        pl = place_tenants(roster,
+                           min(self.cfg.num_cores, len(roster)),
+                           self.model)
+        solved = [set(core) for core in pl.cores]
+        unassigned = set(range(self.cfg.num_cores))
+        target: dict[str, int] = {}
+        current = {t.name: t.core for t in self.tenants.values()}
+        order = sorted(
+            range(len(solved)),
+            key=lambda si: -len(solved[si]))
+        for si in order:
+            best = max(unassigned, key=lambda ci: (
+                sum(1 for n in solved[si] if current.get(n) == ci), -ci))
+            unassigned.discard(best)
+            for n in solved[si]:
+                target[n] = best
+        return target
+
+    def _exchange_units(self, target: dict[str, int]) -> list[tuple]:
+        """Group the target's pending moves into minimal exchange units.
+
+        The pending moves form a permutation-like flow between cores; it
+        decomposes into *chains* (a tenant moves into spare capacity) and
+        *cycles* (tenants trade places — a swap is the 2-cycle).  A cycle
+        must be priced and applied atomically: each leg alone transits
+        through a lopsided group and would misprice the exchange."""
+        pending = [(n, self.tenants[n].core, c)
+                   for n, c in sorted(target.items())
+                   if c != self.tenants[n].core]
+        units: list[tuple] = []
+        while pending:
+            chain = [pending.pop(0)]
+            while True:
+                end = chain[-1][2]
+                if end == chain[0][1]:
+                    break                      # closed cycle
+                nxt = next((m for m in pending if m[1] == end), None)
+                if nxt is None:
+                    break                      # open chain (spare capacity)
+                pending.remove(nxt)
+                chain.append(nxt)
+            units.append(tuple(n for n, _, _ in chain))
+        return units
+
+    def rebalance(self, epoch: int) -> int:
+        """One re-placement round; returns how many tenants moved."""
+        if self.policy == "never" or len(self.tenants) < 2:
+            return 0
+        target = self._target_assignment()
+        units = self._exchange_units(target)
+        moved = 0
+        # most beneficial unit first; re-price against the *current*
+        # membership before each apply (an earlier unit changes groups)
+        while units and moved < self.cfg.max_moves_per_epoch:
+            scored = [(self.move_benefit({n: target[n] for n in u}), u)
+                      for u in units]
+            scored.sort(key=lambda x: (-x[0], x[1]))
+            benefit, unit = scored[0]
+            units.remove(unit)
+            penalty = sum(self.migration_penalty(n) for n in unit)
+            net = benefit - penalty
+            take = self.policy == "always" or net > 0.0
+            self.moves.append({
+                "epoch": epoch, "tenants": unit,
+                "src": tuple(self.tenants[n].core for n in unit),
+                "dst": tuple(target[n] for n in unit),
+                "benefit_cycles": benefit, "penalty_cycles": penalty,
+                "net_cycles": net,
+                "warm_fraction": tuple(self.warm_fraction(n)
+                                       for n in unit),
+                "applied": take,
+            })
+            if take:
+                for n in unit:
+                    self.tenants[n].core = target[n]
+                    self.tenants[n].migrations += 1
+                    self.migrations += 1
+                    moved += 1
+        return moved
+
+    # ------------------------------------------------------------------
+    def run(self, events, num_epochs: int | None = None) -> OnlineReport:
+        """Serve an event stream for `num_epochs` epochs (default: last
+        event epoch + 4 drain epochs)."""
+        events = list(events)
+        if num_epochs is None:
+            num_epochs = (max((e.epoch for e in events), default=0) + 5)
+        by_epoch: dict[int, list[TenantEvent]] = {}
+        for e in events:
+            if e.epoch >= num_epochs:
+                raise ValueError(
+                    f"event at epoch {e.epoch} outside the horizon "
+                    f"{num_epochs}")
+            by_epoch.setdefault(e.epoch, []).append(e)
+        epoch_log: list[dict] = []
+        for epoch in range(num_epochs):
+            todays = by_epoch.get(epoch, [])
+            for e in todays:                      # departures first
+                if e.kind == "depart":
+                    self._depart(e.name)
+            for e in todays:
+                if e.kind == "arrive":
+                    self._arrive(e.name, e.bench)
+            moved = self.rebalance(epoch)
+            self._advance_epoch()
+            epoch_log.append({
+                "epoch": epoch,
+                "tenants": len(self.tenants),
+                "moved": moved,
+                "cores": tuple(tuple(t.name for t in self._members(c))
+                               for c in range(self.cfg.num_cores)),
+            })
+        return self._report(num_epochs, epoch_log)
+
+    def _report(self, num_epochs: int, epoch_log: list) -> OnlineReport:
+        per_tenant: dict[str, dict] = {}
+        slowdowns = []
+        records = {t.name: t for t in self.departed}
+        records.update(self.tenants)
+        for name in sorted(records):
+            t = records[name]
+            if t.instrs == 0:
+                per_tenant[name] = {"bench": t.bench, "instrs": 0,
+                                    "scheduled": False}
+                continue
+            cpi = t.cycles / t.instrs
+            slow = cpi / self.model.solo_cpi(t.bench)
+            slowdowns.append(slow)
+            per_tenant[name] = {
+                "bench": t.bench, "instrs": t.instrs, "cycles": t.cycles,
+                "slot_misses": t.slot_misses, "cpi": cpi,
+                "solo_cpi": self.model.solo_cpi(t.bench),
+                "slowdown": slow, "migrations": t.migrations,
+                "scheduled": True,
+            }
+        return OnlineReport(
+            policy=self.policy,
+            epochs=num_epochs,
+            migrations=self.migrations,
+            per_tenant=per_tenant,
+            worst_slowdown=float(max(slowdowns)) if slowdowns else 0.0,
+            mean_slowdown=float(np.mean(slowdowns)) if slowdowns else 0.0,
+            final_cores=tuple(tuple(t.name for t in self._members(c))
+                              for c in range(self.cfg.num_cores)),
+            moves=self.moves,
+            epoch_log=epoch_log,
+        )

@@ -80,13 +80,25 @@ class ContentionModel:
     predictions (one batched preempted sweep per fleet size, padded to
     power-of-two batch shapes so repeated greedy/swap rounds reuse
     compilations).
+
+    `scenarios` maps benchmark name -> `SlotScenario` for tenants whose
+    binaries slot different opcodes (per-tenant slot taxonomies); benches
+    absent from the mapping use the shared `scenario` default.  Benchmark
+    names are validated up front — an unknown profile raises a ValueError
+    naming the valid set instead of a KeyError from deep inside the trace
+    synthesizer.
     """
 
     def __init__(self, cfg: PlacementConfig | None = None,
                  scenario: isa.SlotScenario | None = None,
-                 trace_seed: int = 0):
+                 trace_seed: int = 0,
+                 scenarios: dict[str, isa.SlotScenario] | None = None):
         self.cfg = cfg or PlacementConfig()
         self.scenario = scenario or isa.SCENARIO_2
+        # per-tenant slot taxonomies: bench name -> SlotScenario overrides
+        # the shared default (tenants compiled against different extension
+        # sets disagree about which opcodes are slotted, paper §IV)
+        self.scenarios = dict(scenarios or {})
         self.trace_seed = trace_seed
         self._traces: dict[str, np.ndarray] = {}
         self._solo_cpi: dict[str, float] = {}
@@ -98,29 +110,48 @@ class ContentionModel:
     # ------------------------------------------------------------------
     def trace(self, bench: str) -> np.ndarray:
         if bench not in self._traces:
+            if bench not in core_traces.BENCHES:
+                raise ValueError(
+                    f"unknown benchmark profile {bench!r} — valid names "
+                    f"are the Embench models in repro.core.traces.BENCHES: "
+                    f"{sorted(core_traces.BENCHES)}")
             self._traces[bench] = core_traces.build_trace(
                 bench, self.cfg.trace_len, seed=self.trace_seed)
         return self._traces[bench]
+
+    def scenario_of(self, bench: str) -> isa.SlotScenario:
+        """The slot taxonomy this bench simulates under (per-tenant
+        mapping first, shared default otherwise)."""
+        return self.scenarios.get(bench, self.scenario)
 
     def _ensure_solo(self, benches) -> None:
         missing = sorted(set(benches) - self._solo_cpi.keys())
         if not missing:
             return
-        tensor = np.stack([self.trace(b) for b in missing])[:, None, :]
-        # the solo window matches each fleet member's step budget so cold
-        # misses amortise identically on both sides of the slowdown ratio
-        res = simulator.sweep_fleet(
-            tensor, [self.cfg.miss_latency], self.scenario,
-            simulator.SchedulerConfig.no_preempt(self.cfg.handler_cycles),
-            slot_counts=[self.cfg.num_slots],
-            total_steps=self.cfg.steps_per_program)
-        self.sim_calls += 1
-        cpi = np.asarray(res.cpi)[:, 0, 0, 0]
-        miss = np.asarray(res.slot_misses)[:, 0, 0, 0]
-        instr = np.asarray(res.instructions)[:, 0, 0, 0]
-        for i, b in enumerate(missing):
-            self._solo_cpi[b] = float(cpi[i])
-            self._solo_miss_rate[b] = float(miss[i]) / max(int(instr[i]), 1)
+        # one batched unpreempted sweep per distinct taxonomy (the common
+        # shared-scenario roster stays a single sweep)
+        by_scen: dict[str, list[str]] = {}
+        for b in missing:
+            by_scen.setdefault(self.scenario_of(b).name, []).append(b)
+        for _, group in sorted(by_scen.items()):
+            tensor = np.stack([self.trace(b) for b in group])[:, None, :]
+            # the solo window matches each fleet member's step budget so
+            # cold misses amortise identically on both sides of the
+            # slowdown ratio
+            res = simulator.sweep_fleet(
+                tensor, [self.cfg.miss_latency], self.scenario_of(group[0]),
+                simulator.SchedulerConfig.no_preempt(
+                    self.cfg.handler_cycles),
+                slot_counts=[self.cfg.num_slots],
+                total_steps=self.cfg.steps_per_program)
+            self.sim_calls += 1
+            cpi = np.asarray(res.cpi)[:, 0, 0, 0]
+            miss = np.asarray(res.slot_misses)[:, 0, 0, 0]
+            instr = np.asarray(res.instructions)[:, 0, 0, 0]
+            for i, b in enumerate(group):
+                self._solo_cpi[b] = float(cpi[i])
+                self._solo_miss_rate[b] = (float(miss[i])
+                                           / max(int(instr[i]), 1))
 
     def warm(self, benches) -> None:
         """Precompute solo references for a bench set in ONE batched sweep
@@ -143,21 +174,25 @@ class ContentionModel:
 
         Each group is a sequence of benchmark names (any order; the result
         vector is ordered like `tuple(sorted(group))`).  All uncached
-        groups of one size are simulated in a single `sweep_fleet` call.
+        groups sharing a (size, per-program taxonomy) signature are
+        simulated in a single `sweep_fleet` call — with no per-tenant
+        scenario mapping that is exactly "one call per size".
         """
         keys = [tuple(sorted(g)) for g in groups]
-        todo: dict[int, list[tuple[str, ...]]] = {}
+        todo: dict[tuple, list[tuple[str, ...]]] = {}
         for k in dict.fromkeys(keys):      # unique, order-preserving
             if k and k not in self._groups:
-                todo.setdefault(len(k), []).append(k)
-        for size, ks in sorted(todo.items()):
+                sig = tuple(self.scenario_of(b).name for b in k)
+                todo.setdefault((len(k), sig), []).append(k)
+        for (size, _sig), ks in sorted(todo.items()):
             self._ensure_solo([b for k in ks for b in k])
             pad = _pad_pow2(len(ks))
             batch = ks + [ks[0]] * (pad - len(ks))
             tensor = np.stack([np.stack([self.trace(b) for b in k])
                                for k in batch])
             res = simulator.sweep_fleet(
-                tensor, [self.cfg.miss_latency], self.scenario,
+                tensor, [self.cfg.miss_latency],
+                [self.scenario_of(b) for b in ks[0]],
                 self.cfg.scheduler(),
                 slot_counts=[self.cfg.num_slots],
                 total_steps=size * self.cfg.steps_per_program)

@@ -162,15 +162,19 @@ class SlotServeEngine:
     # ------------------------------------------------------------------
     def plan_coresidency(self, tenant_benches: dict[str, str], *,
                          slo: float = 1.5, num_cores: int = 1,
-                         model=None, max_rounds: int = 8):
+                         model=None, max_rounds: int = 8,
+                         slo_weights: dict[str, float] | None = None):
         """Contention-aware admission plan for this engine's tenant set.
 
         Instead of taking tenant order as given, ask `repro.sched` which
         tenants should co-reside: tenants are placed onto `num_cores`
         model replicas minimising predicted worst-tenant slot contention,
         and any tenant whose best placement still violates the slowdown
-        `slo` is deferred.  Returns the `AdmissionDecision`; use
-        `apply_admission` to restrict this engine to one core's residents.
+        `slo` is deferred.  `slo_weights` (name -> positive weight)
+        protects foreground tenants: deferral picks the worst
+        slowdown/weight, so batch tenants absorb contention first.
+        Returns the `AdmissionDecision`; use `apply_admission` to restrict
+        this engine to one core's residents.
         """
         from repro.sched.admission import AdmissionController
         from repro.sched.placement import ContentionModel, PlacementConfig
@@ -181,7 +185,47 @@ class SlotServeEngine:
         ctrl = AdmissionController(slo=slo, num_cores=num_cores,
                                    model=model, max_rounds=max_rounds)
         return ctrl.decide({t.name: tenant_benches[t.name]
-                            for t in self.tenants})
+                            for t in self.tenants},
+                           slo_weights=slo_weights)
+
+    def serve_online(self, events, *, policy: str = "warm",
+                     num_cores: int = 2, model=None, online_cfg=None,
+                     num_epochs: int | None = None, apply_core=None):
+        """Serve a churn workload (tenants arriving/leaving mid-serve)
+        with online re-placement — the dynamic counterpart of the static
+        `plan_coresidency` flow.
+
+        `events` is a sequence of `repro.sched.TenantEvent`s; the epoch
+        loop (`repro.sched.online.OnlineReplacer`) carries warm
+        slot/bitstream state per core across epochs and, under the default
+        "warm" policy, migrates a tenant only when the predicted
+        contention saving beats the measured warm-state migration penalty.
+        Returns the `OnlineReport`.  With `apply_core=<i>` the engine
+        afterwards restricts itself to the tenants the final placement
+        left on that core (deferred/other-core tenants are parked like
+        `apply_admission` does).
+        """
+        from repro.sched.online import OnlineConfig, OnlineReplacer
+        from repro.sched.placement import PlacementConfig
+
+        if online_cfg is None:
+            online_cfg = OnlineConfig(
+                num_cores=num_cores,
+                placement=PlacementConfig(
+                    num_slots=self.ecfg.slots_per_shard))
+        rep = OnlineReplacer(online_cfg, model=model,
+                             policy=policy).run(events, num_epochs)
+        if apply_core is not None:
+            if not 0 <= apply_core < len(rep.final_cores):
+                raise ValueError(
+                    f"core index {apply_core} out of range for "
+                    f"{len(rep.final_cores)} cores")
+            keep_names = set(rep.final_cores[apply_core])
+            keep = [t for t in self.tenants if t.name in keep_names]
+            self.deferred += [t for t in self.tenants
+                              if t.name not in keep_names]
+            self.tenants = keep
+        return rep
 
     def apply_admission(self, decision, core: int = 0) -> list[Tenant]:
         """Keep only `core`'s admitted co-residents; park everything else.

@@ -1,0 +1,287 @@
+"""Resumable fleet state (`simulator.FleetState`) and online re-placement
+(`repro.sched.online`): split-resume parity with the one-shot scan,
+migration-penalty probes, and the epoch-driven replacer's policies."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import isa, simulator, slots, traces
+from repro.sched import (ContentionModel, OnlineConfig, OnlineReplacer,
+                         PlacementConfig, TenantEvent)
+from repro.sched.online import POLICIES
+
+CFG = simulator.ReconfigConfig(num_slots=4, miss_latency=50)
+
+
+def preempted_fleet(p=3, n=4_000):
+    return np.stack([traces.build_trace(b, n) for b in
+                     ["minver", "nbody", "crc32", "cubic"][:p]])
+
+
+def assert_state_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def assert_fleet_equal(a, b):
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"field {name}")
+
+
+# ---------------------------------------------------------------------------
+# resume parity: split-at-T == one-shot, bit for bit (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("split", [1, 1_000, 8_999])
+def test_split_resume_equals_one_shot_preempted_p3(split):
+    tr = preempted_fleet(3)
+    sched = simulator.SchedulerConfig(quantum_cycles=1_500)
+    total = 9_000
+    one, s_one = simulator.simulate_many(
+        tr, CFG, isa.SCENARIO_2, sched, total, return_state=True)
+    assert int(one.switches) > 0          # genuinely preempted
+    r1, s1 = simulator.simulate_many(
+        tr, CFG, isa.SCENARIO_2, sched, split, return_state=True)
+    r2, s2 = simulator.simulate_many(
+        tr, CFG, isa.SCENARIO_2, sched, total - split, state=s1,
+        return_state=True)
+    assert_fleet_equal(r2, one)           # cumulative counters match
+    assert_state_equal(s2, s_one)         # caches/cursors/clocks match
+
+
+def test_split_resume_heterogeneous_quanta_and_priorities():
+    tr = preempted_fleet(2)
+    sched = simulator.SchedulerConfig(quantum_cycles=(1_000, 3_000),
+                                      priorities=(2, 1))
+    one = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 6_000)
+    _, s1 = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 2_500,
+                                    return_state=True)
+    r2 = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 3_500,
+                                 state=s1)
+    assert_fleet_equal(r2, one)
+
+
+def test_one_shot_result_unchanged_by_refactor_default_path():
+    """The S = init special case: passing the explicit cold state equals
+    not passing a state at all."""
+    tr = preempted_fleet(2)
+    sched = simulator.SchedulerConfig(quantum_cycles=2_000)
+    implicit = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
+                                       5_000)
+    explicit = simulator.simulate_many(
+        tr, CFG, isa.SCENARIO_2, sched, 5_000,
+        state=simulator.init_fleet_state(2, CFG.num_slots,
+                                         CFG.bs_cache_entries))
+    assert_fleet_equal(implicit, explicit)
+
+
+def test_reset_counters_yields_segment_deltas():
+    tr = preempted_fleet(2)
+    sched = simulator.SchedulerConfig(quantum_cycles=1_500)
+    r1, s1 = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 3_000,
+                                     return_state=True)
+    cum = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 2_000,
+                                  state=s1)
+    seg = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 2_000,
+                                  state=s1.reset_counters())
+    np.testing.assert_array_equal(
+        np.asarray(seg.cycles),
+        np.asarray(cum.cycles) - np.asarray(r1.cycles))
+    np.testing.assert_array_equal(
+        np.asarray(seg.instructions),
+        np.asarray(cum.instructions) - np.asarray(r1.instructions))
+
+
+def test_fleet_state_validation():
+    tr = preempted_fleet(2)
+    sched = simulator.SchedulerConfig(quantum_cycles=2_000)
+    with pytest.raises(ValueError, match="program cursors"):
+        simulator.simulate_many(
+            tr, CFG, isa.SCENARIO_2, sched, 100,
+            state=simulator.init_fleet_state(3, 4))
+    with pytest.raises(ValueError, match="slot geometry"):
+        simulator.simulate_many(
+            tr, CFG, isa.SCENARIO_2, sched, 100,
+            state=simulator.init_fleet_state(2, 8))
+    with pytest.raises(ValueError, match="bitstream cache"):
+        simulator.simulate_many(
+            tr, CFG, isa.SCENARIO_2, sched, 100,
+            state=simulator.init_fleet_state(2, 4, bs_entries=7))
+    with pytest.raises(ValueError, match="num_programs"):
+        simulator.init_fleet_state(0, 4)
+
+
+def test_resume_rejects_shorter_priority_schedule():
+    """A state whose scheduler cursor points past the new schedule's end
+    would gather-clamp to the wrong program — it must be rejected."""
+    tr = preempted_fleet(2)
+    weighted = simulator.SchedulerConfig(quantum_cycles=1_000,
+                                         priorities=(2, 1))
+    _, s1 = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, weighted,
+                                    4_000, return_state=True)
+    s1 = s1._replace(sched_idx=np.int32(2))     # a reachable cursor value
+    uniform = simulator.SchedulerConfig(quantum_cycles=1_000)
+    with pytest.raises(ValueError, match="scheduler cursor"):
+        simulator.simulate_many(tr, CFG, isa.SCENARIO_2, uniform, 100,
+                                state=s1)
+    # same-or-longer schedules resume fine
+    simulator.simulate_many(tr, CFG, isa.SCENARIO_2, weighted, 100,
+                            state=s1)
+
+
+def test_warm_state_resume_skips_cold_misses():
+    """Resuming a warmed fleet takes no new cold misses — the carryable
+    state really carries the disambiguator contents."""
+    tr = np.stack([traces.build_trace("matmult-int", 4_000)])
+    sched = simulator.SchedulerConfig.no_preempt()
+    r1, s1 = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 2_000,
+                                     return_state=True)
+    assert int(np.asarray(r1.slot_misses)[0]) == 1      # its one cold miss
+    seg = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 2_000,
+                                  state=s1.reset_counters())
+    assert int(np.asarray(seg.slot_misses)[0]) == 0     # stays resident
+
+
+# ---------------------------------------------------------------------------
+# slots: vectorized residency probe
+# ---------------------------------------------------------------------------
+
+def test_resident_many_matches_scalar_probe():
+    st = slots.init(4)
+    for t in (3, 5, 3, 9):
+        st = slots.lookup(st, t).state
+    probe = np.asarray(slots.resident_many(st, np.array([3, 5, 9, 7, -1])))
+    np.testing.assert_array_equal(probe, [True, True, True, False, False])
+    for tag, want in zip([3, 5, 9, 7, -1], probe):
+        assert bool(slots.resident(st, np.int32(tag))) == bool(want)
+
+
+# ---------------------------------------------------------------------------
+# online replacer
+# ---------------------------------------------------------------------------
+
+PCFG = PlacementConfig(num_slots=4, miss_latency=50, quantum_cycles=2_000,
+                      trace_len=2_000, steps_per_program=2_000)
+OCFG = OnlineConfig(num_cores=2, epoch_steps=2_000, probe_steps=800,
+                    placement=PCFG)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return ContentionModel(PCFG)
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="arrive"):
+        TenantEvent(0, "join", "a", "minver")
+    with pytest.raises(ValueError, match="bench"):
+        TenantEvent(0, "arrive", "a")
+    with pytest.raises(ValueError, match="epoch"):
+        TenantEvent(-1, "depart", "a")
+
+
+def test_replacer_validation(model):
+    with pytest.raises(ValueError, match="policy"):
+        OnlineReplacer(OCFG, model=model, policy="sometimes")
+    with pytest.raises(ValueError, match="slots"):
+        OnlineReplacer(OnlineConfig(
+            num_cores=2, placement=PlacementConfig(num_slots=8)),
+            model=model)
+    rep = OnlineReplacer(OCFG, model=model)
+    with pytest.raises(ValueError, match="unknown tenant"):
+        rep.run([TenantEvent(0, "depart", "ghost")], 2)
+    rep = OnlineReplacer(OCFG, model=model)
+    with pytest.raises(ValueError, match="twice"):
+        rep.run([TenantEvent(0, "arrive", "a", "crc32"),
+                 TenantEvent(1, "arrive", "a", "crc32")], 3)
+    rep = OnlineReplacer(OCFG, model=model)
+    with pytest.raises(ValueError, match="fresh name"):
+        # a departed name may not be reused: its service record would be
+        # shadowed in the final report
+        rep.run([TenantEvent(0, "arrive", "a", "crc32"),
+                 TenantEvent(1, "depart", "a"),
+                 TenantEvent(2, "arrive", "a", "minver")], 4)
+    rep = OnlineReplacer(OCFG, model=model)
+    with pytest.raises(ValueError, match="horizon"):
+        rep.run([TenantEvent(9, "arrive", "a", "crc32")], 3)
+    with pytest.raises(ValueError, match="unknown benchmark"):
+        OnlineReplacer(OCFG, model=model).run(
+            [TenantEvent(0, "arrive", "a", "nosuchbench")], 2)
+
+
+def test_migration_penalty_warm_beats_cold(model):
+    """A slot-hungry tenant that has run a while is cheaper to resume on
+    its warm core than on a cold one — the measured penalty is positive."""
+    rep = OnlineReplacer(OCFG, model=model, policy="never")
+    rep.run([TenantEvent(0, "arrive", "fg", "minver")], 2)
+    assert rep.warm_fraction("fg") > 0.0
+    assert rep.migration_penalty("fg") > 0.0
+
+
+def test_departures_keep_service_records(model):
+    rep = OnlineReplacer(OCFG, model=model, policy="never")
+    report = rep.run([TenantEvent(0, "arrive", "a", "crc32"),
+                      TenantEvent(0, "arrive", "b", "tarfind"),
+                      TenantEvent(2, "depart", "a")], 4)
+    assert set(report.per_tenant) == {"a", "b"}
+    assert report.per_tenant["a"]["scheduled"]
+    assert report.per_tenant["a"]["instrs"] > 0
+    assert "a" not in {n for core in report.final_cores for n in core}
+
+
+def test_epoch_accounting_conserves_steps(model):
+    """Every epoch advances each non-empty core by exactly epoch_steps
+    instructions, split across its residents."""
+    rep = OnlineReplacer(OCFG, model=model, policy="never")
+    report = rep.run([TenantEvent(0, "arrive", "a", "minver"),
+                      TenantEvent(0, "arrive", "b", "crc32"),
+                      TenantEvent(1, "arrive", "c", "nbody")], 3)
+    total = sum(report.per_tenant[n]["instrs"] for n in "abc")
+    # epoch 0: 2 cores busy (a, b solo); epochs 1-2: both cores, one
+    # holding two tenants is still epoch_steps of scan budget
+    assert total == 2 * OCFG.epoch_steps + 2 * 2 * OCFG.epoch_steps
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_policies_run_and_report(model, policy):
+    events = [TenantEvent(0, "arrive", "fgA", "minver"),
+              TenantEvent(0, "arrive", "fgB", "cubic"),
+              TenantEvent(1, "arrive", "m1", "crc32"),
+              TenantEvent(1, "arrive", "m2", "tarfind")]
+    rep = OnlineReplacer(OCFG, model=model, policy=policy).run(events, 4)
+    assert rep.policy == policy
+    assert rep.epochs == 4
+    assert rep.worst_slowdown >= 1.0
+    assert set(rep.per_tenant) == {"fgA", "fgB", "m1", "m2"}
+    if policy == "never":
+        assert rep.migrations == 0 and not rep.moves
+    roster = [n for core in rep.final_cores for n in core]
+    assert sorted(roster) == ["fgA", "fgB", "m1", "m2"]
+
+
+def test_warm_policy_declines_net_negative_moves(model):
+    """Two interchangeable light tenants: any re-solve diff is a
+    zero-benefit swap, so warm must never migrate while always executes
+    whatever the re-solve implies."""
+    events = [TenantEvent(0, "arrive", "a", "minver"),
+              TenantEvent(0, "arrive", "b", "cubic"),
+              TenantEvent(1, "arrive", "c", "tarfind"),
+              TenantEvent(2, "arrive", "d", "tarfind")]
+    warm = OnlineReplacer(OCFG, model=model, policy="warm").run(events, 5)
+    always = OnlineReplacer(OCFG, model=model,
+                            policy="always").run(events, 5)
+    for m in warm.moves:
+        assert m["applied"] == (m["net_cycles"] > 0)
+    assert warm.migrations <= always.migrations
+
+
+def test_exchange_units_decompose_swaps_and_chains(model):
+    rep = OnlineReplacer(OCFG, model=model)
+    for name, core in (("a", 0), ("b", 1), ("c", 0), ("d", 1)):
+        rep._arrive(name, "crc32")
+        rep.tenants[name].core = core
+    # a<->b swap plus a lone c move: one 2-cycle + one chain
+    units = rep._exchange_units({"a": 1, "b": 0, "c": 1, "d": 1})
+    assert sorted(sorted(u) for u in units) == [["a", "b"], ["c"]]

@@ -73,6 +73,37 @@ def test_slot_hit_routing_reduces_fills(moe_setup):
     assert biased["fills"] < plain["fills"]
 
 
+def test_serve_online_churn_flow(moe_setup):
+    """The dynamic counterpart of plan_coresidency: an event stream served
+    with online re-placement, then the engine restricted to one core's
+    final residents."""
+    from repro.sched import OnlineConfig, PlacementConfig, TenantEvent
+
+    cfg, params = moe_setup
+    tenants = tenants_for(cfg, n=3)
+    tenants[2].name = "t2"
+    eng = SlotServeEngine(cfg, params,
+                          EngineConfig(quantum_tokens=8, slots_per_shard=4),
+                          tenants, max_len=20)
+    ocfg = OnlineConfig(
+        num_cores=2, epoch_steps=2_000, probe_steps=800,
+        placement=PlacementConfig(num_slots=4, quantum_cycles=2_000,
+                                  trace_len=2_000, steps_per_program=2_000))
+    events = [TenantEvent(0, "arrive", "t0", "minver"),
+              TenantEvent(0, "arrive", "t1", "crc32"),
+              TenantEvent(1, "arrive", "t2", "nbody")]
+    rep = eng.serve_online(events, online_cfg=ocfg, num_epochs=3,
+                           apply_core=0)
+    assert rep.policy == "warm"
+    assert set(rep.per_tenant) == {"t0", "t1", "t2"}
+    # the engine now serves exactly core 0's final residents
+    kept = {t.name for t in eng.tenants}
+    assert kept == set(rep.final_cores[0])
+    assert {t.name for t in eng.deferred} == {"t0", "t1", "t2"} - kept
+    if eng.tenants:
+        assert eng.run(4)["steps"] == 4
+
+
 def test_dense_arch_engine_runs(moe_setup):
     """Dense archs have no expert slots; the engine still serves."""
     cfg = cb.get_config("granite-3-2b").smoke()
