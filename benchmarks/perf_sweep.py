@@ -1,4 +1,5 @@
-"""§Perf — sweep-engine wall-clock, PR 2's two claims measured head-to-head.
+"""§Perf — sweep-engine wall-clock: PR 2's two claims plus the PR-5
+interleaved fast path, measured head-to-head.
 
 1. **Stack-distance fast path vs the `lax.scan` path** on the Fig. 6 grid
    ({3 scenarios x 3 miss latencies x 5 FM benchmarks}, the paper's §V-D
@@ -13,6 +14,16 @@
    `_legacy_simulate_fleet` so the gather-hoist + fused-lookup win stays
    measurable after the live code moves on; a `scan_unroll` sweep records
    where unrolling pays on this backend.
+
+3. **Interleaved fast path vs the optimized scan** on preempted
+   fig6-style grids ({slot counts x miss latencies}, preempting quantum,
+   P=2..4): the regime the serving stack lives in (placement search,
+   online re-placement pricing), where the unpreempted engine cannot go —
+   switch points are cost-dependent, so every cell replays its own
+   interleaving at scheduler-window granularity
+   (`repro.core.stackdist_interleaved`).  Parity is asserted bit-for-bit
+   before timing; an `interleave_window` sweep records where the window
+   knob pays on this backend.
 
 Emits machine-readable `BENCH_sweep.json` at the repo root so the perf
 trajectory is tracked PR-over-PR, and a CSV under experiments/bench via
@@ -215,12 +226,70 @@ def bench_p4_preempted() -> dict:
 
 
 # ---------------------------------------------------------------------------
+# 3. preempted fig6-style grid: interleaved fast path vs optimized scan
+# ---------------------------------------------------------------------------
+
+PG_FLEETS = 3
+PG_TRACE_LEN = 30_000
+PG_TOTAL_STEPS = 60_000
+PG_QUANTUM = 20_000           # preempting: the paper's Fig. 7 quantum
+PG_SLOT_COUNTS = (2, 4, 8)
+PG_LATENCIES = (10, 50, 250)
+PG_PROGRAMS = (2, 3, 4)
+# always include the live default so retuning INTERLEAVE_WINDOW keeps the
+# sweep (and the interleaved_s lookup below) well-defined
+PG_WINDOWS = tuple(sorted({256, 1024, simulator.INTERLEAVE_WINDOW}))
+
+
+def bench_preempted_grid() -> dict:
+    """Interleaved fast path vs optimized scan, P=2..4, preempting quanta.
+
+    This is the grid the unpreempted engine can never serve (every {slot
+    count x latency} cell has its own cost-dependent switch points); the
+    acceptance bar for the interleaved engine is >= 5x over the optimized
+    scan here, recorded per fleet size in BENCH_sweep.json.
+    """
+    sched = simulator.SchedulerConfig(quantum_cycles=PG_QUANTUM)
+    out = {}
+    for p in PG_PROGRAMS:
+        tensor = scheduler.fleet_traces(
+            scheduler.make_fleets(p)[:PG_FLEETS], PG_TRACE_LEN)
+
+        def sweep(path, window=None, p=p, tensor=tensor):
+            return simulator.sweep_fleet(
+                tensor, PG_LATENCIES, isa.SCENARIO_2, sched,
+                slot_counts=PG_SLOT_COUNTS, total_steps=PG_TOTAL_STEPS,
+                path=path, interleave_window=window)
+
+        # correctness first: the two engines must agree bit-for-bit
+        scan_r, fast_r = sweep("scan"), sweep("interleaved")
+        for a, b in zip(scan_r, fast_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        scan_s = _best_of(lambda: sweep("scan"))
+        window_sweep = {str(w): _best_of(lambda w=w: sweep("interleaved", w))
+                        for w in PG_WINDOWS}
+        fast_s = window_sweep[str(simulator.INTERLEAVE_WINDOW)]
+        out[f"p{p}"] = {
+            "grid": f"{PG_FLEETS} fleets x P={p} x {PG_TOTAL_STEPS} steps, "
+                    f"quantum {PG_QUANTUM}, {len(PG_SLOT_COUNTS)} slots x "
+                    f"{len(PG_LATENCIES)} latencies",
+            "scan_s": scan_s,
+            "interleaved_s": fast_s,
+            "speedup": scan_s / fast_s,
+            "default_window": simulator.INTERLEAVE_WINDOW,
+            "window_sweep_s": window_sweep,
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
 
 
 def run() -> tuple[list[str], dict]:
     report = {
         "fig6_grid": bench_fig6_grid(),
         "p4_preempted": bench_p4_preempted(),
+        "preempted_grid": bench_preempted_grid(),
         "meta": {
             "backend": jax.default_backend(),
             "device": str(jax.devices()[0]),
@@ -231,6 +300,7 @@ def run() -> tuple[list[str], dict]:
     with open(SWEEP_JSON, "w") as f:
         json.dump(report, f, indent=2)
     g, p = report["fig6_grid"], report["p4_preempted"]
+    pg = report["preempted_grid"]
     rows = [
         "section,variant,seconds,speedup",
         f"fig6_grid,scan,{g['scan_s']:.3f},1.00x",
@@ -240,9 +310,20 @@ def run() -> tuple[list[str], dict]:
     ]
     rows += [f"p4_preempted,unroll={u},{s:.3f},-"
              for u, s in p["unroll_sweep_s"].items()]
+    for key in sorted(pg):
+        e = pg[key]
+        rows += [
+            f"preempted_grid_{key},scan,{e['scan_s']:.3f},1.00x",
+            f"preempted_grid_{key},interleaved,{e['interleaved_s']:.3f},"
+            f"{e['speedup']:.1f}x",
+        ]
+        rows += [f"preempted_grid_{key},window={w},{s:.3f},-"
+                 for w, s in e["window_sweep_s"].items()]
+    worst = min(e["speedup"] for e in pg.values())
     rows.append(f"# fast path {g['speedup']:.1f}x on the fig6 grid; "
                 f"optimized scan {p['speedup']:.2f}x on the preempted P=4 "
-                "fleet; BENCH_sweep.json written")
+                f"fleet; interleaved >= {worst:.1f}x on the preempted "
+                "fig6-style grids; BENCH_sweep.json written")
     return rows, report
 
 

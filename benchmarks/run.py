@@ -7,6 +7,7 @@ root — the machine-readable perf trajectory CI uploads per PR.  Partial
 runs (``--only``) merge into the existing JSON instead of clobbering it.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig6]
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,placement_search]
 """
 from __future__ import annotations
 
@@ -106,6 +107,14 @@ def bench_placement_study():
     return lines, head[2:]
 
 
+def bench_placement_search():
+    """Placement-search timing anchor (rides the interleaved fast path)."""
+    from benchmarks import placement_search
+    lines, _ = placement_search.run()
+    head = [l for l in lines if l.startswith("# finding")][0]
+    return lines, head[2:]
+
+
 def bench_online_churn():
     """Warm-state-aware online re-placement vs never/always baselines."""
     from benchmarks import online_churn
@@ -126,6 +135,7 @@ BENCHES = {
     "roofline_table": bench_roofline,
     "perf_sweep": bench_perf_sweep,
     "placement_study": bench_placement_study,
+    "placement_search": bench_placement_search,
     "online_churn": bench_online_churn,
 }
 
@@ -147,14 +157,17 @@ def _record_fleet_json(results: dict) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings; a module runs when "
+                         "any of them matches its name")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
+    only = [s for s in (args.only or "").split(",") if s]
     results: dict = {}
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
-        if args.only and args.only not in name:
+        if only and not any(s in name for s in only):
             continue
         t0 = time.time()
         lines, derived = fn()

@@ -5,5 +5,5 @@ adaptation, slot-resident expert serving (expert_slots).  See DESIGN.md §2.
 """
 from repro.core import (  # noqa: F401
     bitstream, expert_slots, isa, scheduler, simulator, slots, stackdist,
-    traces,
+    stackdist_interleaved, traces,
 )

@@ -25,8 +25,9 @@ per-program quantum vector.  The paper's pair experiments are the P=2
 special case; the scheduling-policy axes feed `repro.sched`'s
 contention-aware placement and admission control.
 
-Two execution paths serve the sweep entry points (`sweep_fleet`,
-`simulate_single`, `simulate_single_batch`); a dispatcher picks per call:
+Three execution paths serve the sweep entry points (`sweep_fleet`,
+`simulate_many`, `simulate_single`, `simulate_single_batch`); a dispatcher
+picks per call:
 
   * **stack-distance fast path** (`repro.core.stackdist`): one Mattson pass
     per trace yields exact miss counts for every slot count at once, and
@@ -37,15 +38,29 @@ Two execution paths serve the sweep entry points (`sweep_fleet`,
     latency-independent) and the bitstream cache is *warm* (entries >=
     distinct tags, so it never evicts).  `stackdist_eligible` encodes both
     rules plus the no-overflow guard.
-  * **`lax.scan` path**: the general cycle-by-cycle round-robin machine,
-    used for preempted fleets and cold bitstream caches.  Its hot loop
-    pre-gathers the per-program (tag, hw-cost) streams once per call
-    (instead of a dependent double gather per step), fuses the
-    disambiguator + bitstream lookups into one state update
-    (`slots.lookup_fused`), and unrolls the scan body (`scan_unroll`).
+  * **interleaved fast path** (`repro.core.stackdist_interleaved`): the
+    preempted generalisation.  Switch points depend on per-access costs
+    (the quantum is counted in cycles), so the merged access order differs
+    per {slot count x latency x quantum} cell and the grid cannot collapse;
+    instead each cell replays its interleaving at *scheduler-window*
+    granularity — one vectorized Mattson cummax pass per window, a
+    `lax.while_loop` whose trip count is ~steps/window + one per context
+    switch instead of one per step.  Exact (bit-for-bit) iff the bitstream
+    cache is warm over the FLEET's merged tag set and no int32 accumulator
+    can overflow (`interleaved_eligible`); ~15x over the optimized scan on
+    preempted fig6-style grids (BENCH_sweep.json).
+  * **`lax.scan` path**: the general cycle-by-cycle round-robin machine —
+    the reference semantics, and the fallback for cold bitstream caches and
+    resumed (`state=`) runs.  Its hot loop pre-gathers the per-program
+    (tag, hw-cost) streams once per call (instead of a dependent double
+    gather per step), fuses the disambiguator + bitstream lookups into one
+    state update (`slots.lookup_fused`), and unrolls the scan body
+    (`scan_unroll`).
 
-Callers can force a path with `path="scan"`/`"stackdist"` (parity tests do);
-the default `"auto"` routes eligible sweeps through stack distance.
+Callers can force a path with `path="scan"|"stackdist"|"interleaved"`
+(parity tests do); the default `"auto"` routes unpreempted eligible sweeps
+through stack distance and preempted eligible one-shot sweeps through the
+interleaved engine.
 
 The scan's carry is an explicit, resumable value (`FleetState`):
 `simulate_many(..., state=S, return_state=True)` runs N steps from S and
@@ -67,13 +82,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import isa, slots, stackdist
+from repro.core import isa, slots, stackdist, stackdist_interleaved
 from repro.core.traces import Mix, analytic_cpi  # re-export for callers
 
 __all__ = [
     "ReconfigConfig", "SchedulerConfig", "SimResult", "PairResult",
     "FleetResult", "FleetState", "init_fleet_state",
-    "fleet_tag_table", "stackdist_eligible",
+    "fleet_tag_table", "stackdist_eligible", "interleaved_eligible",
     "quanta_vector", "priority_schedule",
     "simulate_single", "simulate_single_batch",
     "simulate_many", "sweep_fleet",
@@ -88,6 +103,15 @@ __all__ = [
 # to the duplicated loop body, so the shared default stays 1; accelerators
 # with per-step dispatch overhead are where larger unrolls pay off.
 SCAN_UNROLL = 1
+
+# default scheduler-window size of the interleaved fast path — a pure
+# performance knob (a quantum larger than the window spans several
+# iterations via the carried quantum-cycle counter; results are identical
+# for any window >= 1).  Tuned on CPU: 256-1024 are within noise of each
+# other on both the fig6-style preempted grid and the ContentionModel
+# batch shape; smaller windows waste iterations, larger ones waste memory
+# bandwidth on accesses past the next switch.
+INTERLEAVE_WINDOW = 512
 
 
 @dataclass(frozen=True)
@@ -212,7 +236,16 @@ class PairResult(NamedTuple):
 def stackdist_eligible(tag_row, *, quantum_cycles, bs_entries: int,
                        max_miss_latency: int, bs_miss_extra: int,
                        total_steps: int) -> bool:
-    """True iff the stack-distance fast path is *exact* for this run.
+    """True iff the *unpreempted* stack-distance fast path is exact.
+
+    This predicate gates `repro.core.stackdist` — the engine that collapses
+    the whole {slot count x latency} grid into one distance profile.  That
+    collapse needs the merged access order to be grid-independent, which
+    only holds when program 0 runs alone, so the quantum must be provably
+    unreachable; preempted runs are NOT served by this engine, but they are
+    no longer scan-only either — `interleaved_eligible` gates the
+    interleave-aware engine (`repro.core.stackdist_interleaved`) that
+    replays each grid cell's own switch points at window granularity.
 
     Three conditions (see module docstring and `repro.core.stackdist`):
 
@@ -240,15 +273,107 @@ def stackdist_eligible(tag_row, *, quantum_cycles, bs_entries: int,
     return warm and unpreempted
 
 
-def _check_path(path: str, eligible: bool) -> str:
-    if path not in ("auto", "stackdist", "scan"):
+def interleaved_eligible(tag_table, *, bs_entries: int, miss_latencies,
+                         bs_miss_extra: int, handler_cycles: int,
+                         total_steps: int) -> bool:
+    """True iff the interleave-aware fast path is *exact* for this run.
+
+    Gates `repro.core.stackdist_interleaved`, which serves preempted (and
+    mixed preempted/unpreempted) one-shot runs.  Unlike
+    `stackdist_eligible` there is no quantum condition at all: every grid
+    cell replays its own switch points, so any quantum — uniform,
+    per-program, swept, even unreachable — is exact.  What remains:
+
+    1. warm bitstream cache over the *fleet*: `bs_entries` covers the
+       merged tag alphabet (`tag_table` is the (P, num_opcodes) per-program
+       table; the caches are shared, so the union matters — a fleet whose
+       second program slots more opcodes than its first can be cold even
+       when program 0 alone would be warm).  Warm means a bitstream miss
+       happens exactly on each tag's first touch in the merged stream,
+       decoupling the bitstream axis from the slot-count axis;
+    2. non-negative costs: latencies / bitstream penalty / handler >= 0,
+       so the in-window cycle accumulation is monotone;
+    3. no-overflow guard: worst-case per-access cost plus a handler every
+       access, summed over `total_steps`, stays inside int32 — the same
+       accumulators the scan uses.
+
+    Resumed (`state=`) runs are never eligible: the engine replays from a
+    cold merged stream, so the dispatchers route them to the scan before
+    consulting this predicate.
+    """
+    num_tags = int(np.max(tag_table)) + 1
+    warm = bs_entries >= num_tags
+    lats = np.asarray(miss_latencies)
+    nonneg = (int(np.min(lats)) >= 0 and int(bs_miss_extra) >= 0
+              and int(handler_cycles) >= 0)
+    worst_step = (int(np.max(isa.INSTR_HW_CYCLES)) + int(np.max(lats))
+                  + int(bs_miss_extra) + int(handler_cycles))
+    no_overflow = total_steps * worst_step < np.iinfo(np.int32).max
+    return warm and nonneg and no_overflow
+
+
+# auto-dispatch heuristics for the interleaved engine (forcing
+# path="interleaved" only requires exactness, i.e. `interleaved_eligible`):
+# below this minimum quantum a cell switches every handful of accesses and
+# the window engine degenerates toward one iteration per scheduler run,
+# losing its sequential-depth advantage over the scan
+_INTERLEAVED_AUTO_MIN_QUANTUM = 256
+# per-iteration transient footprint bound: window x num_tags x grid cells
+# per fleet (the fleet axis is chunked separately, see
+# _sweep_fleet_interleaved)
+_INTERLEAVED_CHUNK_ELEMS = 16_000_000
+
+
+def _interleaved_window(quanta_grid, total_steps: int,
+                        window: int | None) -> int:
+    """Static window size: the tuned default, shrunk to the next power of
+    two covering the largest quantum (tiny quanta expire within tiny
+    windows) and never beyond the run length."""
+    if window is None:
+        q = int(np.max(np.asarray(quanta_grid)))
+        window = min(INTERLEAVE_WINDOW, 1 << max(0, (q - 1)).bit_length())
+    return max(1, min(int(window), total_steps))
+
+
+def _interleaved_auto_ok(quanta_grid, grid_cells: int, num_tags: int,
+                         total_steps: int, window: int | None) -> bool:
+    w = _interleaved_window(quanta_grid, total_steps, window)
+    return (int(np.min(np.asarray(quanta_grid)))
+            >= _INTERLEAVED_AUTO_MIN_QUANTUM
+            and w * max(num_tags, 1) * grid_cells
+            <= _INTERLEAVED_CHUNK_ELEMS)
+
+
+def _check_single_path(path: str, eligible: bool) -> str:
+    """Path validation for the single-program entry points, which only
+    dispatch between the unpreempted stack-distance engine and the scan."""
+    if path == "interleaved":
+        raise ValueError(
+            "interleaved path is not served by the single-program entry "
+            "points (a solo run is never preempted; the unpreempted "
+            "stack-distance engine already collapses its grid) — use "
+            "simulate_many or sweep_fleet to force it")
+    return _check_path(path, eligible)
+
+
+def _check_path(path: str, stackdist_ok: bool, interleaved_ok: bool = False,
+                interleaved_auto: bool = False) -> str:
+    if path not in ("auto", "stackdist", "interleaved", "scan"):
         raise ValueError(f"unknown path {path!r}")
-    if path == "stackdist" and not eligible:
+    if path == "stackdist" and not stackdist_ok:
         raise ValueError(
             "stack-distance path requires an unpreempted run with a warm "
             "bitstream cache (see simulator.stackdist_eligible)")
+    if path == "interleaved" and not interleaved_ok:
+        raise ValueError(
+            "interleaved path requires a one-shot run with a warm "
+            "bitstream cache over the fleet's merged tag set and "
+            "non-negative int32-safe costs (see "
+            "simulator.interleaved_eligible)")
     if path == "auto":
-        path = "stackdist" if eligible else "scan"
+        path = ("stackdist" if stackdist_ok
+                else "interleaved" if interleaved_ok and interleaved_auto
+                else "scan")
     return path
 
 
@@ -288,7 +413,7 @@ def simulate_single(trace: np.ndarray, cfg: ReconfigConfig,
     trace = jnp.asarray(trace, jnp.int32)
     eligible = _single_eligible(cfg, scenario, cfg.miss_latency,
                                 trace.shape[0])
-    if _check_path(path, eligible) == "stackdist":
+    if _check_single_path(path, eligible) == "stackdist":
         cycles, misses, bs = stackdist.lanes_unpreempted(
             trace[None, :], scenario.instr_tag, isa.INSTR_HW_CYCLES,
             jnp.int32(cfg.num_slots), jnp.asarray([cfg.miss_latency]),
@@ -318,7 +443,7 @@ def simulate_single_batch(traces: np.ndarray, miss_latencies: np.ndarray,
     eligible = _single_eligible(cfg, scenario,
                                 int(np.max(np.asarray(miss_latencies))),
                                 traces.shape[-1])
-    if _check_path(path, eligible) == "stackdist":
+    if _check_single_path(path, eligible) == "stackdist":
         chunk = _stackdist_chunk(traces.shape[-1],
                                  max(scenario.num_tags, 1))
         outs = [
@@ -577,7 +702,8 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                   total_steps: int = 400_000,
                   scan_unroll: int = SCAN_UNROLL, *,
                   state: FleetState | None = None,
-                  return_state: bool = False):
+                  return_state: bool = False,
+                  path: str = "auto"):
     """Round-robin fleet of P programs sharing one reconfigurable core.
 
     traces: (P, N) int32 instruction ids; `scenarios` is one shared
@@ -590,10 +716,16 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
     `FleetState` (None = cold start), and `return_state=True` additionally
     returns the final state, making the call "run `total_steps` from S ->
     (results, S')".  A run split at any step boundary reproduces the
-    one-shot run bit-for-bit (counters are cumulative in the state).  The
-    resumed path always takes the cycle-by-cycle scan — the stack-distance
-    fast path stays one-shot-only (`stackdist_eligible` assumes cold,
-    complete runs) and `simulate_many` never dispatches it.
+    one-shot run bit-for-bit (counters are cumulative in the state).
+
+    Dispatch: one-shot result-only calls (`state=None`,
+    `return_state=False`) with a warm bitstream cache route through the
+    interleave-aware fast path (`repro.core.stackdist_interleaved`) —
+    preempted or not — and are bit-for-bit equal to the scan.  Resumed
+    segments and calls that need the final `FleetState` always take the
+    cycle-by-cycle scan: the fast paths replay from a cold merged stream
+    and never materialise a scan carry.  `path="scan"|"interleaved"`
+    forces an engine ("interleaved" raises on resume/ineligible runs).
     """
     traces = jnp.asarray(traces, jnp.int32)
     if traces.ndim != 2:
@@ -603,6 +735,37 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
     num_progs = traces.shape[0]
     table = fleet_tag_table(scenarios, num_progs)
     schedule = sched.schedule(num_progs)
+    if path not in ("auto", "scan", "interleaved"):
+        raise ValueError(
+            f"unknown path {path!r} — simulate_many accepts "
+            f"'auto'|'scan'|'interleaved' (solo unpreempted runs take the "
+            f"stack-distance engine through simulate_single/sweep_fleet)")
+    one_shot = state is None and not return_state
+    if path == "interleaved" and not one_shot:
+        raise ValueError(
+            "interleaved path is one-shot result-only: it replays from a "
+            "cold merged stream and never materialises a FleetState — "
+            "resumed (state=) and return_state=True runs take the scan")
+    quanta = sched.quanta(num_progs)
+    eligible = one_shot and interleaved_eligible(
+        table, bs_entries=cfg.bs_cache_entries,
+        miss_latencies=[cfg.miss_latency], bs_miss_extra=cfg.bs_miss_extra,
+        handler_cycles=sched.handler_cycles, total_steps=total_steps)
+    if path == "interleaved" and not eligible:
+        raise ValueError(
+            "interleaved path requires a warm bitstream cache over the "
+            "fleet's merged tag set and non-negative int32-safe costs "
+            "(see simulator.interleaved_eligible)")
+    if path == "interleaved" or (
+            path == "auto" and eligible and _interleaved_auto_ok(
+                quanta[None, :], 1, int(np.max(table)) + 1, total_steps,
+                None)):
+        res = _sweep_fleet_interleaved(
+            traces[None], table, jnp.asarray([cfg.miss_latency], jnp.int32),
+            jnp.asarray([cfg.num_slots], jnp.int32), quanta[None, :],
+            schedule, sched.handler_cycles, cfg.bs_miss_extra, total_steps,
+            None)
+        return FleetResult(*(x[0, 0, 0, 0] for x in res))
     if state is not None:
         _check_fleet_state(state, num_progs, cfg.num_slots,
                            cfg.bs_cache_entries)
@@ -688,11 +851,40 @@ def _sweep_fleet_stackdist(fleets, table, lats, counts, bs_miss_extra,
     )
 
 
+def _sweep_fleet_interleaved(fleets, table, lats, counts, quanta_grid,
+                             schedule, handler, bs_miss_extra,
+                             total_steps: int,
+                             window: int | None) -> FleetResult:
+    """Serve the full (Q, B, K, L) grid from the interleave-aware engine.
+
+    Each cell replays its own switch points (they are cost-dependent), so
+    nothing broadcasts — but the sequential depth per cell is scheduler
+    windows, not steps.  The fleet axis is processed in memory-bounded
+    chunks (at most two compiled shapes: full + tail), mirroring
+    `_sweep_fleet_stackdist`.
+    """
+    num_tags = max(int(np.max(np.asarray(table))) + 1, 1)
+    w = _interleaved_window(quanta_grid, total_steps, window)
+    cells = quanta_grid.shape[0] * counts.shape[0] * lats.shape[0]
+    chunk = max(1, _INTERLEAVED_CHUNK_ELEMS // max(w * num_tags * cells, 1))
+    grids = [
+        stackdist_interleaved.sweep_preempted(
+            fleets[i:i + chunk], table, isa.INSTR_HW_CYCLES, counts, lats,
+            jnp.asarray(quanta_grid, jnp.int32),
+            jnp.asarray(schedule, jnp.int32), jnp.int32(handler),
+            jnp.int32(bs_miss_extra), num_tags=num_tags,
+            total_steps=total_steps, window=w)
+        for i in range(0, fleets.shape[0], chunk)]
+    return FleetResult(*(jnp.concatenate([g[f] for g in grids], axis=1)
+                         for f in range(5)))
+
+
 def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
                 sched: SchedulerConfig, *, slot_counts, quanta=None,
                 bs_cache_entries: int = 64, bs_miss_extra: int = 100,
                 total_steps: int = 400_000, path: str = "auto",
-                scan_unroll: int = SCAN_UNROLL) -> FleetResult:
+                scan_unroll: int = SCAN_UNROLL,
+                interleave_window: int | None = None) -> FleetResult:
     """One call over the {quanta x fleets x slot counts x miss latencies}
     grid.
 
@@ -703,15 +895,19 @@ def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
     keeps the historical 3-axis grid at `sched.quantum_cycles`.  Priority
     weights (`sched.priorities`) apply to every cell of the grid.
 
-    Dispatch (see module docstring): eligible grids — unpreempted at EVERY
-    quantum cell, warm bitstream cache (`stackdist_eligible`) — collapse
-    the K x L grid into one stack-distance pass per fleet (quantum cells
-    are then identical by construction and broadcast); everything else runs
-    the jitted vmap^4 of `lax.scan`s, where slot counts sweep by masking
-    one max-size disambiguator (`slots.lookup`'s `num_active`).  `path`
-    forces a specific engine ("stackdist" raises if the grid is
-    ineligible); both return bit-for-bit identical results on eligible
-    grids.
+    Dispatch (see module docstring): grids unpreempted at EVERY quantum
+    cell with a warm bitstream cache (`stackdist_eligible`) collapse the
+    K x L grid into one stack-distance pass per fleet (quantum cells are
+    then identical by construction and broadcast); preempted or mixed
+    grids with a fleet-warm bitstream cache (`interleaved_eligible`)
+    replay every cell's own interleaving at scheduler-window granularity
+    (`repro.core.stackdist_interleaved`; `interleave_window` overrides the
+    tuned window size, results identical for any value); everything else
+    runs the jitted vmap^4 of `lax.scan`s, where slot counts sweep by
+    masking one max-size disambiguator (`slots.lookup`'s `num_active`).
+    `path` forces a specific engine ("stackdist"/"interleaved" raise if
+    the grid is ineligible); all engines return bit-for-bit identical
+    results on eligible grids.
     """
     fleets = jnp.asarray(fleets, jnp.int32)
     if fleets.ndim != 3:
@@ -739,7 +935,15 @@ def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
         bs_entries=bs_cache_entries,
         max_miss_latency=int(np.max(np.asarray(miss_latencies))),
         bs_miss_extra=bs_miss_extra, total_steps=total_steps)
-    if _check_path(path, eligible) == "stackdist":
+    inter_eligible = interleaved_eligible(
+        table, bs_entries=bs_cache_entries, miss_latencies=lats,
+        bs_miss_extra=bs_miss_extra, handler_cycles=sched.handler_cycles,
+        total_steps=total_steps)
+    inter_auto = _interleaved_auto_ok(
+        quanta_grid, quanta_grid.shape[0] * counts.shape[0] * lats.shape[0],
+        int(np.max(table)) + 1, total_steps, interleave_window)
+    chosen = _check_path(path, eligible, inter_eligible, inter_auto)
+    if chosen == "stackdist":
         res = _sweep_fleet_stackdist(fleets, table, lats, counts,
                                      bs_miss_extra, total_steps)
         if quanta is None:
@@ -749,6 +953,14 @@ def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
         q = quanta_grid.shape[0]
         return FleetResult(*(jnp.broadcast_to(x[None], (q,) + x.shape)
                              for x in res))
+    if chosen == "interleaved":
+        res = _sweep_fleet_interleaved(
+            fleets, table, lats, counts, quanta_grid,
+            sched.schedule(num_progs), sched.handler_cycles, bs_miss_extra,
+            total_steps, interleave_window)
+        if quanta is None:
+            return FleetResult(*(x[0] for x in res))
+        return res
     s_max = int(np.max(np.asarray(slot_counts)))
     res = _sweep_fleet(
         fleets, table, lats, counts, jnp.asarray(quanta_grid),

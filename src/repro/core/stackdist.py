@@ -39,6 +39,11 @@ stepping an LRU state machine.
 This module is deliberately generic: it knows nothing about the RISC-V
 alphabet.  Callers pass the per-opcode tag and cost tables
 (`repro.core.simulator` passes `isa.INSTR_HW_CYCLES`).
+
+Preempted runs cannot use this collapse — their merged access order is
+cost-dependent, hence grid-cell-dependent — but they are not scan-only:
+`repro.core.stackdist_interleaved` replays each cell's own interleaving
+at scheduler-window granularity with the same cummax distance pass.
 """
 from __future__ import annotations
 

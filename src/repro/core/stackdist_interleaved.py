@@ -1,0 +1,228 @@
+"""Interleave-aware LRU stack-distance engine for *preempted* fleets.
+
+The unpreempted engine (`repro.core.stackdist`) collapses the whole
+{slot count x miss latency} grid into post-processing of one distance
+profile, but it is only exact when the scheduler never fires.  Under
+preemption that collapse is impossible in principle: the round-robin
+quantum is counted in *cycles*, a slot miss burns more of the quantum
+than a hit, and how often an access misses depends on the slot count and
+miss latency — so the context-switch points, and with them the merged
+access order itself, differ per grid cell.  No single merged tag stream
+can serve the whole grid.
+
+What *can* be shared is the mathematics.  This module keeps Mattson's
+argument — an access to a shared exact-LRU disambiguator hits at slot
+count S iff its stack distance in the **merged** (interleaved) stream is
+below S, where the stack distance is the number of distinct slotted tags
+touched since the access's previous occurrence, regardless of which
+program touched them — and drops the sequential granularity from *steps*
+to *scheduler windows*.  Per grid cell the engine carries the merged
+stream's per-tag last-occurrence vector plus the scheduler state
+(per-program cursors, priority-schedule cursor, cycles burnt in the open
+quantum) and each `lax.while_loop` iteration commits one window of the
+scheduled program's upcoming accesses:
+
+  1. gather a static-size window of the scheduled program's next `W`
+     accesses (the trace cursor wraps exactly like the scan's);
+  2. one `cummax` pass over the (W, num_tags) occurrence matrix — seeded
+     with the carried last-occurrence vector — yields every window
+     access's stack distance in the merged stream (the same trick as
+     `stackdist._profile_one`, shifted to a non-empty initial state);
+  3. distances give misses (miss iff first touch or distance >= S),
+     misses give per-access cycle costs, the running cost sum gives the
+     quantum-expiry point; the window commits up to that point (or the
+     whole window when the quantum survives it — the carried
+     quantum-cycle counter resumes it next iteration), last-occurrence /
+     cursors / counters advance, and an expiry pays the context-switch
+     handler and rotates the weighted round-robin schedule.
+
+The loop runs until `total_steps` accesses committed.  Its trip count is
+~ total_steps / W plus one extra iteration per context switch — two to
+three orders of magnitude below the per-step scan's trip count — while
+every inner operation is a wide vector op over the window: the same
+sequential-depth-for-parallel-work trade that bought the unpreempted
+path its ~40x, now available in the preempted regime the serving stack
+(placement search, online re-placement pricing) actually lives in.
+
+Exactness needs the **warm bitstream cache** precondition for the same
+reason the unpreempted path does: warm (entries >= distinct tags across
+*every* program's tag table — the disambiguator and bitstream cache are
+shared, so tag streams merge) means the bitstream cache never evicts, a
+bitstream miss happens exactly on each tag's first (cold) touch in the
+merged stream, and the bitstream axis decouples from the slot-count
+axis.  Cold bitstream caches stay on the scan.  All arithmetic is int32
+like the scan, so eligible results are bit-for-bit identical
+(`repro.core.simulator.interleaved_eligible` guards warmth and int32
+overflow; parity is enforced by tests/test_stackdist_interleaved.py).
+
+The window size `W` is a pure performance knob, not a correctness
+parameter: a quantum larger than the window simply spans several
+iterations via the carried quantum-cycle counter.  Like its sibling,
+this module is deliberately generic — it knows nothing about the RISC-V
+alphabet; callers pass the per-opcode tag and cost tables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["InterleavedGrid", "sweep_preempted"]
+
+
+class InterleavedGrid(NamedTuple):
+    """Per-cell fleet counters over a {quantum x fleet x slots x latency}
+    grid — the scan's `FleetResult` fields with (Q, B, K, L, ...) axes."""
+
+    cycles: jnp.ndarray        # (Q, B, K, L, P) int32, incl. handler
+    instructions: jnp.ndarray  # (Q, B, K, L, P) int32
+    slot_misses: jnp.ndarray   # (Q, B, K, L, P) int32
+    bs_misses: jnp.ndarray     # (Q, B, K, L, P) int32
+    switches: jnp.ndarray      # (Q, B, K, L) int32
+
+
+def _simulate_cell(ptags, pcosts, num_active, miss_latency, quanta,
+                   schedule, handler, bs_miss_extra, num_tags: int,
+                   total_steps: int, window: int):
+    """One grid cell: (P, N) pre-gathered tag/cost streams -> counters.
+
+    Mirrors `simulator._fleet_step_fn`'s cost model exactly, one window
+    per iteration instead of one access per scan step.  `num_active`,
+    `miss_latency` and `quanta` are the cell's coordinates; `schedule`
+    is the weighted round-robin turn order shared by the whole grid.
+    """
+    num_progs, trace_len = ptags.shape
+    tag_ids = jnp.arange(num_tags, dtype=jnp.int32)
+    warange = jnp.arange(window, dtype=jnp.int32)
+    sched_len = schedule.shape[0]
+
+    class Carry(NamedTuple):
+        last_pos: jnp.ndarray   # (num_tags,) merged-stream last occurrence
+        cursors: jnp.ndarray    # (P,) per-program trace cursor
+        sched_idx: jnp.ndarray  # () cursor into the priority schedule
+        steps_done: jnp.ndarray  # () committed accesses (merged position)
+        q_cycles: jnp.ndarray   # () cycles burnt in the open quantum
+        cycles: jnp.ndarray     # (P,) attributed cycles (incl. handler)
+        instrs: jnp.ndarray     # (P,)
+        misses: jnp.ndarray     # (P,) disambiguator misses
+        bs_misses: jnp.ndarray  # (P,) bitstream-cache (= cold) misses
+        switches: jnp.ndarray   # () context switches
+
+    def cond(c: Carry):
+        return c.steps_done < total_steps
+
+    def body(c: Carry) -> Carry:
+        p = schedule[c.sched_idx]
+        idx = jnp.remainder(c.cursors[p] + warange, trace_len)
+        w_tags = jnp.take(ptags[p], idx)
+        w_hw = jnp.take(pcosts[p], idx)
+        slotted = w_tags >= 0
+
+        # merged-stream stack distances for the whole window in one pass:
+        # occ/cummax give each tag's last occurrence at-or-before every
+        # window row; shifting by one row and flooring with the carried
+        # last_pos yields the state each access observes
+        pos = c.steps_done + warange
+        occ = jnp.where(w_tags[:, None] == tag_ids[None, :],
+                        pos[:, None], jnp.int32(-1))
+        cm = jax.lax.cummax(occ, axis=0)
+        prev = jnp.concatenate(
+            [c.last_pos[None, :],
+             jnp.maximum(cm[:-1], c.last_pos[None, :])], axis=0)
+        safe = jnp.clip(w_tags, 0)   # clamp -1 so the gather stays in-bounds
+        prev_self = jnp.take_along_axis(prev, safe[:, None], axis=1)[:, 0]
+        cold = slotted & (prev_self < 0)
+        dist = jnp.sum(prev > prev_self[:, None], axis=1).astype(jnp.int32)
+        miss = slotted & (cold | (dist >= num_active))
+
+        # scan cost model: hw + miss latency + (warm bitstream cache ->
+        # bitstream miss exactly on the cold touch)
+        cost = (w_hw + jnp.where(miss, miss_latency, 0)
+                + jnp.where(cold, bs_miss_extra, 0)).astype(jnp.int32)
+        cum = c.q_cycles + jnp.cumsum(cost)
+        expire = cum >= quanta[p]
+        any_exp = jnp.any(expire)
+        # first expiring access executes, then the switch fires — exactly
+        # the scan's `q = q_cycles + cost; do_switch = q >= quantum`
+        n_exp = jnp.where(any_exp,
+                          jnp.argmax(expire).astype(jnp.int32) + 1,
+                          jnp.int32(window))
+        remaining = (total_steps - c.steps_done).astype(jnp.int32)
+        n = jnp.minimum(n_exp, remaining)
+        do_switch = any_exp & (n_exp <= remaining)
+
+        committed = jnp.take(cm, n - 1, axis=0)   # per-tag last occ <= n-1
+        end_cum = jnp.take(cum, n - 1)
+        run_cycles = (end_cum - c.q_cycles
+                      + jnp.where(do_switch, handler, 0).astype(jnp.int32))
+        in_run = warange < n
+        return Carry(
+            last_pos=jnp.maximum(c.last_pos, committed),
+            cursors=c.cursors.at[p].add(n),
+            sched_idx=jnp.where(do_switch,
+                                (c.sched_idx + 1) % sched_len,
+                                c.sched_idx),
+            steps_done=c.steps_done + n,
+            q_cycles=jnp.where(do_switch, 0, end_cum).astype(jnp.int32),
+            cycles=c.cycles.at[p].add(run_cycles),
+            instrs=c.instrs.at[p].add(n),
+            misses=c.misses.at[p].add(
+                jnp.sum(miss & in_run).astype(jnp.int32)),
+            bs_misses=c.bs_misses.at[p].add(
+                jnp.sum(cold & in_run).astype(jnp.int32)),
+            switches=c.switches + do_switch.astype(jnp.int32),
+        )
+
+    zeros_p = jnp.zeros((num_progs,), jnp.int32)
+    final = jax.lax.while_loop(cond, body, Carry(
+        last_pos=jnp.full((num_tags,), -1, jnp.int32),
+        cursors=zeros_p, sched_idx=jnp.int32(0), steps_done=jnp.int32(0),
+        q_cycles=jnp.int32(0), cycles=zeros_p, instrs=zeros_p,
+        misses=zeros_p, bs_misses=zeros_p, switches=jnp.int32(0)))
+    return (final.cycles, final.instrs, final.misses, final.bs_misses,
+            final.switches)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_tags", "total_steps", "window"))
+def sweep_preempted(fleets: jnp.ndarray, tag_table: jnp.ndarray,
+                    instr_costs: jnp.ndarray, slot_counts: jnp.ndarray,
+                    miss_latencies: jnp.ndarray, quanta: jnp.ndarray,
+                    schedule: jnp.ndarray, handler, bs_miss_extra, *,
+                    num_tags: int, total_steps: int,
+                    window: int) -> InterleavedGrid:
+    """Preempted-fleet sweep: (B, P, N) traces -> InterleavedGrid.
+
+    `tag_table` is the (P, num_opcodes) per-program instr->tag table,
+    `instr_costs` the shared (num_opcodes,) hw-cycle table, `quanta` the
+    (Q, P) swept per-program quantum grid, `schedule` the weighted
+    round-robin turn order.  Every {quantum x fleet x slot count x miss
+    latency} cell runs its own interleaving (the switch points are
+    cost-dependent, see module docstring); cells are independent, so the
+    grid is a vmap^4 over one cell engine, axis order matching the
+    scan's `simulator._sweep_fleet`.
+    """
+    table = jnp.asarray(tag_table, jnp.int32)
+    costs = jnp.asarray(instr_costs, jnp.int32)
+    fleets = jnp.asarray(fleets, jnp.int32)
+    # hoist the per-access dependent double gather out of the loop, like
+    # the scan path does: (B, P, N) tag and hw-cost streams
+    ptags = jax.vmap(lambda f: jnp.take_along_axis(table, f, axis=1))(fleets)
+    pcosts = costs[fleets]
+
+    def one(pt, pc, s, lat, qv):
+        return _simulate_cell(pt, pc, s, lat, qv, schedule,
+                              jnp.asarray(handler, jnp.int32),
+                              jnp.asarray(bs_miss_extra, jnp.int32),
+                              num_tags, total_steps, window)
+
+    f = jax.vmap(one, in_axes=(None, None, None, 0, None))   # latency axis
+    f = jax.vmap(f, in_axes=(None, None, 0, None, None))     # slot-count
+    f = jax.vmap(f, in_axes=(0, 0, None, None, None))        # fleet axis
+    f = jax.vmap(f, in_axes=(None, None, None, None, 0))     # quantum axis
+    return InterleavedGrid(*f(ptags, pcosts,
+                              jnp.asarray(slot_counts, jnp.int32),
+                              jnp.asarray(miss_latencies, jnp.int32),
+                              jnp.asarray(quanta, jnp.int32)))

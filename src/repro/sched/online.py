@@ -34,6 +34,14 @@ sequence of *epochs* over the resumable fleet simulator
 beating never-migrate on worst-tenant slowdown while migrating less than
 always-rebalance; `repro.serve.engine.SlotServeEngine.serve_online` wires
 the loop into the serving layer.
+
+Cost structure per epoch: the re-solve and every move's contention-delta
+pricing go through the `ContentionModel`, whose one-shot preempted sweeps
+ride the interleave-aware stack-distance fast path
+(`repro.core.stackdist_interleaved`) — the dominant cost of an epoch with
+churn.  Only the epoch *advance* and the migration-penalty probes resume
+explicit `FleetState`s and therefore stay on the cycle-by-cycle scan
+(resumed segments are never fast-path eligible).
 """
 from __future__ import annotations
 

@@ -23,8 +23,12 @@ it.  This module treats that choice as an optimisation problem:
     (`benchmarks/placement_study.py`) compares against.
 
 Solo references are unpreempted + warm-cache, so the sweep dispatcher
-serves them from stack-distance passes; candidate fleets are preempted and
-take the scan path.
+serves them from stack-distance passes; candidate fleets are preempted
+and — since they are one-shot, warm-bitstream runs — ride the
+interleave-aware fast path (`repro.core.stackdist_interleaved`), which is
+what makes the greedy + swap search's many batched sweeps cheap.  The
+`path` knob forces an engine for parity studies; every engine returns
+bit-for-bit identical predictions.
 """
 from __future__ import annotations
 
@@ -87,18 +91,26 @@ class ContentionModel:
     names are validated up front — an unknown profile raises a ValueError
     naming the valid set instead of a KeyError from deep inside the trace
     synthesizer.
+
+    `path` is handed to every underlying `sweep_fleet` call: the default
+    "auto" serves solo references from the unpreempted stack-distance
+    engine and preempted candidate groups from the interleaved engine;
+    forcing "scan" reproduces the same predictions bit-for-bit on the
+    reference machine (tests pin this).
     """
 
     def __init__(self, cfg: PlacementConfig | None = None,
                  scenario: isa.SlotScenario | None = None,
                  trace_seed: int = 0,
-                 scenarios: dict[str, isa.SlotScenario] | None = None):
+                 scenarios: dict[str, isa.SlotScenario] | None = None,
+                 path: str = "auto"):
         self.cfg = cfg or PlacementConfig()
         self.scenario = scenario or isa.SCENARIO_2
         # per-tenant slot taxonomies: bench name -> SlotScenario overrides
         # the shared default (tenants compiled against different extension
         # sets disagree about which opcodes are slotted, paper §IV)
         self.scenarios = dict(scenarios or {})
+        self.path = path
         self.trace_seed = trace_seed
         self._traces: dict[str, np.ndarray] = {}
         self._solo_cpi: dict[str, float] = {}
@@ -143,7 +155,7 @@ class ContentionModel:
                 simulator.SchedulerConfig.no_preempt(
                     self.cfg.handler_cycles),
                 slot_counts=[self.cfg.num_slots],
-                total_steps=self.cfg.steps_per_program)
+                total_steps=self.cfg.steps_per_program, path=self.path)
             self.sim_calls += 1
             cpi = np.asarray(res.cpi)[:, 0, 0, 0]
             miss = np.asarray(res.slot_misses)[:, 0, 0, 0]
@@ -195,7 +207,8 @@ class ContentionModel:
                 [self.scenario_of(b) for b in ks[0]],
                 self.cfg.scheduler(),
                 slot_counts=[self.cfg.num_slots],
-                total_steps=size * self.cfg.steps_per_program)
+                total_steps=size * self.cfg.steps_per_program,
+                path=self.path)
             self.sim_calls += 1
             self.groups_simulated += len(ks)
             cpis = np.asarray(res.cpi)[:, 0, 0, :]

@@ -309,6 +309,9 @@ def estimate_fleet_contention(benches: list[str], *, num_slots: int = 4,
                                       handler_cycles=handler_cycles,
                                       priorities=priorities)
     tr = np.stack([core_traces.build_trace(n, trace_len) for n in benches])
+    # one-shot preempted fleet with a warm bitstream cache: the dispatcher
+    # serves this from the interleave-aware stack-distance engine
+    # (scheduler-window replay, bit-for-bit equal to the scan)
     fleet = simulator.simulate_many(tr, cfg, scenarios, sched, total_steps)
 
     # solo reference: each tenant alone on the core, never preempted — both

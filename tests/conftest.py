@@ -1,0 +1,42 @@
+"""Shared test configuration.
+
+Registers the "ci" hypothesis profile at conftest-import time — before any
+test module is imported and before the hypothesis pytest plugin resolves
+HYPOTHESIS_PROFILE — so CI's `HYPOTHESIS_PROFILE=ci` pins EVERY randomized
+parity sweep in the suite (test_stackdist.py, test_slots.py,
+test_stackdist_interleaved.py) to a fixed, derandomized profile instead of
+only the module that happened to register it.
+"""
+import os
+
+import pytest
+
+try:
+    from hypothesis import settings
+except ImportError:       # dev extra; the suites degrade to seeded variants
+    settings = None
+
+if settings is not None:
+    settings.register_profile("ci", max_examples=20, deadline=None,
+                              derandomize=True)
+    if os.environ.get("HYPOTHESIS_PROFILE") == "ci":
+        settings.load_profile("ci")
+
+
+@pytest.fixture
+def route_spy(monkeypatch):
+    """Record every dispatch into the interleaved fast-path engine, then
+    delegate to the real implementation — shared by the dispatcher-routing
+    tests (test_stackdist_interleaved.py) and the sched-layer wiring tests
+    (test_sched.py)."""
+    from repro.core import simulator
+
+    calls = []
+    real = simulator._sweep_fleet_interleaved
+
+    def spy(*args, **kwargs):
+        calls.append(args)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(simulator, "_sweep_fleet_interleaved", spy)
+    return calls

@@ -1,0 +1,16 @@
+"""Shared exact-equality assertion for fleet-simulator results.
+
+Every engine-parity suite (test_stackdist.py, test_stackdist_interleaved.py,
+test_sched.py, test_online.py) pins the same contract: results from
+different engines/resume splits must be bit-for-bit identical integers,
+never merely close.  One helper, so the contract cannot drift per module.
+"""
+import numpy as np
+
+
+def assert_fleet_equal(a, b):
+    """Exact integer equality, field by field, for FleetResult-like
+    NamedTuples (works for PairResult/SimResult too)."""
+    for field, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"field {field}")

@@ -24,10 +24,8 @@ def assert_state_equal(a, b):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
-def assert_fleet_equal(a, b):
-    for name, x, y in zip(a._fields, a, b):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
-                                      err_msg=f"field {name}")
+# shared bit-for-bit equality contract, tests/fleet_asserts.py
+from fleet_asserts import assert_fleet_equal  # noqa: E402
 
 
 # ---------------------------------------------------------------------------

@@ -28,10 +28,8 @@ def synthetic_fleet(b=2, p=3, n=4_000, seed=1234):
     return rng.integers(0, isa.NUM_INSTRUCTIONS, (b, p, n)).astype(np.int32)
 
 
-def assert_fleet_equal(a, b):
-    for name, x, y in zip(a._fields, a, b):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
-                                      err_msg=f"field {name}")
+# shared bit-for-bit equality contract, tests/fleet_asserts.py
+from fleet_asserts import assert_fleet_equal  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -110,6 +108,22 @@ def test_uniform_quantum_sweep_matches_pr2_golden():
     res = _pin_sweep(simulator.SchedulerConfig(quantum_cycles=3_000))
     np.testing.assert_array_equal(np.asarray(res.cycles), PR2_CYCLES)
     np.testing.assert_array_equal(np.asarray(res.switches), PR2_SWITCHES)
+
+
+def test_interleaved_fast_path_reproduces_pr2_golden():
+    """The interleave-aware engine must hit the exact PR-2 golden integers
+    on the preempted pin grid — same numbers whichever engine serves."""
+    sched = simulator.SchedulerConfig(quantum_cycles=3_000)
+    res = simulator.sweep_fleet(
+        synthetic_fleet(), [10, 250], isa.SCENARIO_2, sched,
+        slot_counts=[2, 4], total_steps=10_000, path="interleaved")
+    np.testing.assert_array_equal(np.asarray(res.cycles), PR2_CYCLES)
+    np.testing.assert_array_equal(np.asarray(res.switches), PR2_SWITCHES)
+    # and auto now serves this grid from the interleaved engine
+    auto = simulator.sweep_fleet(
+        synthetic_fleet(), [10, 250], isa.SCENARIO_2, sched,
+        slot_counts=[2, 4], total_steps=10_000)
+    assert_fleet_equal(res, auto)
 
 
 def test_uniform_vector_and_unit_priorities_reproduce_scalar_exactly():
@@ -468,6 +482,31 @@ def test_weighted_admission_validation(model):
         ctrl.decide(TENANTS, slo_weights={"ghost": 2.0})
     with pytest.raises(ValueError, match="positive"):
         ctrl.decide(TENANTS, slo_weights={"a": 0.0})
+
+
+# ---------------------------------------------------------------------------
+# contention model rides the interleaved fast path (dispatch wiring)
+# ---------------------------------------------------------------------------
+
+def test_contention_model_group_sweeps_ride_interleaved_engine(route_spy):
+    """The placement search's candidate-group sweeps are one-shot preempted
+    warm-cache runs: auto dispatch must serve them from the interleaved
+    engine, with predictions bit-for-bit equal to a scan-forced model.
+    (`route_spy` is the shared engine-dispatch recorder, tests/conftest.py.)
+    """
+    cfg = PlacementConfig(quantum_cycles=2_000, trace_len=3_000,
+                          steps_per_program=4_000)
+    groups = [("minver", "crc32"), ("nbody", "tarfind")]
+    auto_model = ContentionModel(cfg)
+    preds = auto_model.predict(groups)
+    assert route_spy, "group sweep did not dispatch to the interleaved engine"
+    scan_model = ContentionModel(cfg, path="scan")
+    scan_preds = scan_model.predict(groups)
+    for a, b in zip(preds, scan_preds):
+        np.testing.assert_array_equal(a, b)
+    # solo references too: identical between the two models
+    for b in ("minver", "crc32"):
+        assert auto_model.solo_cpi(b) == scan_model.solo_cpi(b)
 
 
 # ---------------------------------------------------------------------------

@@ -14,10 +14,8 @@ from repro.core import isa, simulator, stackdist, traces
 NO_PREEMPT = simulator.SchedulerConfig.no_preempt()
 
 
-def _assert_fleet_equal(a: simulator.FleetResult, b: simulator.FleetResult):
-    for field, x, y in zip(a._fields, a, b):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
-                                      err_msg=f"field {field}")
+# shared bit-for-bit equality contract, tests/fleet_asserts.py
+from fleet_asserts import assert_fleet_equal as _assert_fleet_equal  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
