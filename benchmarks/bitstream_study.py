@@ -13,6 +13,13 @@ we can sweep:
 on the 5 FM-class benchmarks under scenario 2 (4 slots, 50-cycle
 reconfiguration).  Group-tag space is 10 ("M"+"F" groups), so capacities
 beyond 10 are pure slack; the interesting region is 1-8.
+
+The whole capacity x penalty grid is ONE `simulator.sweep_bitstream`
+call: the stacked Mattson pass (`repro.core.stackdist_cold`) profiles
+each trace once per slot count and reads every (capacity, penalty) cell
+off the resulting miss-stream distance histogram — bit-for-bit equal to
+the per-cell scans this benchmark used to run (parity is pinned by
+tests/test_resume_fastpath.py at a reduced trace length).
 """
 from __future__ import annotations
 
@@ -27,23 +34,27 @@ L2_PENALTIES = (50, 250)
 TRACE_LEN = 100_000
 
 
-def run() -> list[str]:
+def run(trace_len: int = TRACE_LEN, path: str = "auto") -> list[str]:
+    benches = list(traces.FM_BENCHES)
+    trs = np.stack([traces.build_trace(name, trace_len)
+                    for name in benches])
+    grid = simulator.sweep_bitstream(
+        trs, isa.SCENARIO_2, slot_counts=[4], miss_latencies=[50],
+        bs_entries=CAPACITIES, bs_miss_extras=L2_PENALTIES,
+        total_steps=trace_len, path=path)
+    cycles = np.asarray(grid.cycles)          # (B, 1, 1, E, X)
+    slot_misses = np.asarray(grid.slot_misses)  # (B, 1)
+    bs_misses = np.asarray(grid.bs_misses)      # (B, 1, E)
     rows = ["benchmark,bs_entries,l2_penalty,bs_miss_rate,speedup_vs_IMF"]
-    for name in traces.FM_BENCHES:
-        trace = traces.build_trace(name, TRACE_LEN)
+    for i, name in enumerate(benches):
         imf = simulator.analytic_cpi(traces.mix_of(name), isa.RV32IMF)
-        for cap in CAPACITIES:
-            for pen in L2_PENALTIES:
-                res = simulator.simulate_single(
-                    trace,
-                    simulator.ReconfigConfig(
-                        num_slots=4, miss_latency=50,
-                        bs_cache_entries=cap, bs_miss_extra=pen),
-                    isa.SCENARIO_2)
-                miss_rate = float(res.bs_misses) / max(
-                    float(res.slot_misses), 1.0)
+        for e, cap in enumerate(CAPACITIES):
+            for x, pen in enumerate(L2_PENALTIES):
+                miss_rate = float(bs_misses[i, 0, e]) / max(
+                    float(slot_misses[i, 0]), 1.0)
+                cpi = float(cycles[i, 0, 0, e, x]) / trace_len
                 rows.append(f"{name},{cap},{pen},{miss_rate:.3f},"
-                            f"{imf / float(res.cpi):.3f}")
+                            f"{imf / cpi:.3f}")
     # aggregate: capacity at which the bitstream cache stops mattering
     rows.append("# finding: >=8 entries (~the live group working set) makes "
                 "the L2 penalty irrelevant; a 4-entry bitstream cache "

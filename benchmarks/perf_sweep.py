@@ -25,6 +25,16 @@ interleaved fast path, measured head-to-head.
    before timing; an `interleave_window` sweep records where the window
    knob pays on this backend.
 
+4. **Stacked cold-bitstream pass vs the per-cell scan loop** on the
+   bitstream_study grid ({capacity x penalty} on the FM benches): one
+   `sweep_bitstream` call (`repro.core.stackdist_cold`) against one scan
+   per cell — the loop `benchmarks/bitstream_study.py` used to run.
+
+5. **Resumable interleaved engine vs the scan on state-seeded segments**:
+   a preempted P=3 run split at the midpoint, its second half resumed
+   from the materialised `FleetState` on both engines — the shape of
+   every online-serving epoch advance and migration probe.
+
 Emits machine-readable `BENCH_sweep.json` at the repo root so the perf
 trajectory is tracked PR-over-PR, and a CSV under experiments/bench via
 benchmarks.run.
@@ -283,6 +293,87 @@ def bench_preempted_grid() -> dict:
 
 
 # ---------------------------------------------------------------------------
+# 4. cold-bitstream grid: stacked Mattson pass vs per-cell scan loop
+# ---------------------------------------------------------------------------
+
+BS_TRACE_LEN = 20_000
+BS_CAPACITIES = (2, 4, 8, 16)
+BS_PENALTIES = (50, 250)
+
+
+def bench_cold_bitstream() -> dict:
+    """`benchmarks/bitstream_study.py`'s {capacity x penalty} grid: one
+    stacked-pass `sweep_bitstream` call vs the per-cell scan loop it
+    replaced.  The acceptance bar is >= 5x on this grid; parity is
+    asserted bit-for-bit before timing."""
+    trs = np.stack([traces.build_trace(n, BS_TRACE_LEN)
+                    for n in traces.FM_BENCHES])
+    kw = dict(slot_counts=[4], miss_latencies=[50],
+              bs_entries=BS_CAPACITIES, bs_miss_extras=BS_PENALTIES,
+              total_steps=BS_TRACE_LEN)
+
+    def grid(path):
+        return simulator.sweep_bitstream(trs, isa.SCENARIO_2, path=path,
+                                         **kw)
+
+    for a, b in zip(grid("scan"), grid("stackdist_cold")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    scan_s = _best_of(lambda: grid("scan"))
+    fast_s = _best_of(lambda: grid("stackdist_cold"))
+    return {
+        "grid": f"{trs.shape[0]} benches x {len(BS_CAPACITIES)} capacities "
+                f"x {len(BS_PENALTIES)} penalties @ {BS_TRACE_LEN} steps",
+        "scan_s": scan_s,
+        "stackdist_cold_s": fast_s,
+        "speedup": scan_s / fast_s,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 5. resumed segments: resumable interleaved engine vs scan
+# ---------------------------------------------------------------------------
+
+RS_TRACE_LEN = 30_000
+RS_TOTAL_STEPS = 60_000
+
+
+def bench_resumed_segment() -> dict:
+    """State-seeded resume (the online layer's epoch-advance shape): a
+    preempted P=3 run split at the midpoint, the second half resumed from
+    the materialised FleetState on both engines."""
+    tensor = scheduler.fleet_traces(
+        scheduler.make_fleets(3)[:1], RS_TRACE_LEN)[0]
+    sched = simulator.SchedulerConfig(quantum_cycles=PG_QUANTUM)
+    cfg = simulator.ReconfigConfig(num_slots=4, miss_latency=50)
+    half = RS_TOTAL_STEPS // 2
+    _, seed = simulator.simulate_many(tensor, cfg, isa.SCENARIO_2, sched,
+                                      half, return_state=True)
+
+    def segment(path):
+        return simulator.simulate_many(tensor, cfg, isa.SCENARIO_2, sched,
+                                       half, state=seed, return_state=True,
+                                       path=path)
+
+    # correctness first: results AND final states must agree bit-for-bit
+    (scan_r, scan_st), (fast_r, fast_st) = segment("scan"), segment(
+        "interleaved")
+    for a, b in zip(scan_r, fast_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(scan_st),
+                    jax.tree_util.tree_leaves(fast_st)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    scan_s = _best_of(lambda: segment("scan"))
+    fast_s = _best_of(lambda: segment("interleaved"))
+    return {
+        "grid": f"P=3 x {half} resumed steps, quantum {PG_QUANTUM}, "
+                f"50c misses, mid-run FleetState seed",
+        "scan_s": scan_s,
+        "interleaved_resume_s": fast_s,
+        "speedup": scan_s / fast_s,
+    }
+
+
+# ---------------------------------------------------------------------------
 
 
 def run() -> tuple[list[str], dict]:
@@ -290,6 +381,8 @@ def run() -> tuple[list[str], dict]:
         "fig6_grid": bench_fig6_grid(),
         "p4_preempted": bench_p4_preempted(),
         "preempted_grid": bench_preempted_grid(),
+        "cold_bitstream": bench_cold_bitstream(),
+        "resumed_segment": bench_resumed_segment(),
         "meta": {
             "backend": jax.default_backend(),
             "device": str(jax.devices()[0]),
@@ -319,11 +412,23 @@ def run() -> tuple[list[str], dict]:
         ]
         rows += [f"preempted_grid_{key},window={w},{s:.3f},-"
                  for w, s in e["window_sweep_s"].items()]
+    cb, rs = report["cold_bitstream"], report["resumed_segment"]
+    rows += [
+        f"cold_bitstream,scan,{cb['scan_s']:.3f},1.00x",
+        f"cold_bitstream,stackdist_cold,{cb['stackdist_cold_s']:.3f},"
+        f"{cb['speedup']:.1f}x",
+        f"resumed_segment,scan,{rs['scan_s']:.3f},1.00x",
+        f"resumed_segment,interleaved,{rs['interleaved_resume_s']:.3f},"
+        f"{rs['speedup']:.1f}x",
+    ]
     worst = min(e["speedup"] for e in pg.values())
     rows.append(f"# fast path {g['speedup']:.1f}x on the fig6 grid; "
                 f"optimized scan {p['speedup']:.2f}x on the preempted P=4 "
                 f"fleet; interleaved >= {worst:.1f}x on the preempted "
-                "fig6-style grids; BENCH_sweep.json written")
+                f"fig6-style grids; stacked cold-bitstream "
+                f"{cb['speedup']:.1f}x on the bitstream_study grid; "
+                f"resumed segments {rs['speedup']:.1f}x; "
+                "BENCH_sweep.json written")
     return rows, report
 
 

@@ -8,6 +8,7 @@ runs (``--only``) merge into the existing JSON instead of clobbering it.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig6]
     PYTHONPATH=src python -m benchmarks.run [--only fig6,placement_search]
+    PYTHONPATH=src python -m benchmarks.run --list   # names --only matches
 """
 from __future__ import annotations
 
@@ -160,8 +161,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated substrings; a module runs when "
                          "any of them matches its name")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered module names (the values "
+                         "--only matches against) and exit")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
+    if args.list:
+        for name in BENCHES:
+            print(name)
+        return
     os.makedirs(args.out, exist_ok=True)
     only = [s for s in (args.only or "").split(",") if s]
     results: dict = {}

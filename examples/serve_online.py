@@ -9,18 +9,51 @@ and prices every implied move as predicted-contention-delta minus a
 `FleetState` is replayed on its warm core and on a cold core, and the
 cycle difference is what the move must pay back.
 
+Every resumed segment — the per-epoch advances and both migration probes
+— rides the interleaved engine's resumable entry rather than the
+cycle-by-cycle scan; the demo instruments the dispatcher to print which
+engine served each epoch.
+
     PYTHONPATH=src python examples/serve_online.py
 """
+import contextlib
+
 import jax
 import numpy as np
 
 from repro.configs import base as cb
+from repro.core import simulator
 from repro.models import transformer
 from repro.sched import (ContentionModel, OnlineConfig, PlacementConfig,
                          TenantEvent)
 from repro.serve.engine import EngineConfig, SlotServeEngine, Tenant
 
 cb.load_all()
+
+
+@contextlib.contextmanager
+def engine_log():
+    """Tag every fleet-simulator dispatch while the block runs: the
+    resumable interleaved entry vs the cycle-by-cycle scan."""
+    calls = []
+    real_resume = simulator._resume_fleet_interleaved
+    real_scan = simulator._simulate_fleet
+
+    def spy_resume(*a, **k):
+        calls.append("interleaved-resume")
+        return real_resume(*a, **k)
+
+    def spy_scan(*a, **k):
+        calls.append("scan")
+        return real_scan(*a, **k)
+
+    simulator._resume_fleet_interleaved = spy_resume
+    simulator._simulate_fleet = spy_scan
+    try:
+        yield calls
+    finally:
+        simulator._resume_fleet_interleaved = real_resume
+        simulator._simulate_fleet = real_scan
 
 PCFG = PlacementConfig(num_slots=4, miss_latency=50, quantum_cycles=2_000,
                        trace_len=3_000, steps_per_program=3_000)
@@ -51,12 +84,36 @@ def main():
         tenants, max_len=70)
 
     model = ContentionModel(PCFG)
+
+    # multi-epoch resumed serve of one core, state carried epoch to epoch:
+    # each segment seeds the interleaved engine from the previous epoch's
+    # FleetState (never the scan)
+    print("-- multi-epoch resumed serve (one core, state carried) --")
+    benches = ("minver", "crc32")
+    tr = np.stack([np.asarray(model.trace(b)) for b in benches])
+    scens = [model.scenario_of(b) for b in benches]
+    st = simulator.init_fleet_state(len(benches), PCFG.num_slots,
+                                    OCFG.bs_cache_entries)
+    for epoch in range(3):
+        with engine_log() as calls:
+            res, st = simulator.simulate_many(
+                tr, OCFG.reconfig(), scens, PCFG.scheduler(),
+                total_steps=OCFG.epoch_steps, state=st, return_state=True)
+        print(f"  epoch {epoch}: engine={'+'.join(calls)} "
+              f"cycles={np.asarray(res.cycles).tolist()} "
+              f"switches={int(res.switches)}")
+
     print("-- online re-placement (warm-state-aware) --")
-    rep = eng.serve_online(EVENTS, online_cfg=OCFG, model=model,
-                           num_epochs=6, apply_core=0)
+    with engine_log() as calls:
+        rep = eng.serve_online(EVENTS, online_cfg=OCFG, model=model,
+                               num_epochs=6, apply_core=0)
     print(f"policy={rep.policy} epochs={rep.epochs} "
           f"migrations={rep.migrations} "
           f"worst slowdown={rep.worst_slowdown:.4f}")
+    n_fast = sum(c == "interleaved-resume" for c in calls)
+    n_scan = sum(c == "scan" for c in calls)
+    print(f"resumed dispatches during serve: {n_fast} interleaved-resume, "
+          f"{n_scan} scan")
     for m in rep.moves:
         warm = ",".join(f"{w:.2f}" for w in m["warm_fraction"])
         print(f"  epoch {m['epoch']}: move {m['tenants']} "

@@ -25,7 +25,7 @@ per-program quantum vector.  The paper's pair experiments are the P=2
 special case; the scheduling-policy axes feed `repro.sched`'s
 contention-aware placement and admission control.
 
-Three execution paths serve the sweep entry points (`sweep_fleet`,
+Four execution paths serve the sweep entry points (`sweep_fleet`,
 `simulate_many`, `simulate_single`, `simulate_single_batch`); a dispatcher
 picks per call:
 
@@ -48,19 +48,33 @@ picks per call:
     switch instead of one per step.  Exact (bit-for-bit) iff the bitstream
     cache is warm over the FLEET's merged tag set and no int32 accumulator
     can overflow (`interleaved_eligible`); ~15x over the optimized scan on
-    preempted fig6-style grids (BENCH_sweep.json).
+    preempted fig6-style grids (BENCH_sweep.json).  The engine is also
+    *resumable*: a scan-shaped `FleetState` seeds it (cache contents map
+    to virtual merged-stream positions, the open quantum / scheduler
+    cursor / counters seed the loop carry) and a `FleetState`
+    materialises back out, bit-for-bit equal to the scan's.
+  * **stacked cold-bitstream path** (`repro.core.stackdist_cold`): for
+    *unpreempted* runs whose bitstream cache is undersized, the
+    disambiguator's miss subsequence is itself an LRU reference stream, so
+    a second per-slot-count Mattson pass over it yields exact bitstream
+    hit/miss counts for every `bs_cache_entries` at once —
+    `stackdist_cold_eligible` drops the warmth condition entirely
+    (`sweep_bitstream` exposes the full capacity x penalty grid in one
+    call).
   * **`lax.scan` path**: the general cycle-by-cycle round-robin machine —
-    the reference semantics, and the fallback for cold bitstream caches and
-    resumed (`state=`) runs.  Its hot loop pre-gathers the per-program
-    (tag, hw-cost) streams once per call (instead of a dependent double
-    gather per step), fuses the disambiguator + bitstream lookups into one
-    state update (`slots.lookup_fused`), and unrolls the scan body
-    (`scan_unroll`).
+    the reference semantics, and the fallback for the one remaining
+    stronghold: preempted runs with a cold bitstream cache (plus
+    hand-crafted `FleetState`s no engine can seed from).  Its hot loop
+    pre-gathers the per-program (tag, hw-cost) streams once per call
+    (instead of a dependent double gather per step), fuses the
+    disambiguator + bitstream lookups into one state update
+    (`slots.lookup_fused`), and unrolls the scan body (`scan_unroll`).
 
-Callers can force a path with `path="scan"|"stackdist"|"interleaved"`
-(parity tests do); the default `"auto"` routes unpreempted eligible sweeps
-through stack distance and preempted eligible one-shot sweeps through the
-interleaved engine.
+Callers can force a path with
+`path="scan"|"stackdist"|"stackdist_cold"|"interleaved"` (parity tests
+do); the default `"auto"` routes unpreempted eligible sweeps through
+stack distance (warm) or the stacked cold pass, and preempted eligible
+sweeps — one-shot or resumed — through the interleaved engine.
 
 The scan's carry is an explicit, resumable value (`FleetState`):
 `simulate_many(..., state=S, return_state=True)` runs N steps from S and
@@ -69,8 +83,12 @@ returns (results, S'), with the one-shot run being the
 bit-for-bit equal to the unsplit run.  This is what lets the online
 serving layer (`repro.sched.online`) carry warm slot/bitstream caches
 across epochs and price tenant migration by resuming a tenant on a cold
-core.  Resumed segments always take the scan path; the stack-distance
-fast path stays one-shot-only.
+core.  Resumed segments ride the interleaved engine whenever it is
+exact for them (`interleaved_eligible` + a seedable state); every
+returned `FleetState` is in *canonical* form — residents sorted by LRU
+clock into a prefix — so states are comparable across engines (canonical
+form is behaviour-preserving: exact-LRU eviction depends only on the
+resident (tag, last_use) set, never on physical slot order).
 """
 from __future__ import annotations
 
@@ -82,16 +100,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import isa, slots, stackdist, stackdist_interleaved
+from repro.core import (isa, slots, stackdist, stackdist_cold,
+                        stackdist_interleaved)
 from repro.core.traces import Mix, analytic_cpi  # re-export for callers
 
 __all__ = [
     "ReconfigConfig", "SchedulerConfig", "SimResult", "PairResult",
     "FleetResult", "FleetState", "init_fleet_state",
-    "fleet_tag_table", "stackdist_eligible", "interleaved_eligible",
+    "fleet_tag_table", "stackdist_eligible", "stackdist_cold_eligible",
+    "interleaved_eligible",
     "quanta_vector", "priority_schedule",
     "simulate_single", "simulate_single_batch",
-    "simulate_many", "sweep_fleet",
+    "simulate_many", "sweep_fleet", "sweep_bitstream",
     "simulate_pair", "simulate_pair_batch",
     "analytic_cpi", "fixed_pair_cpi", "fixed_fleet_cpi",
 ]
@@ -273,6 +293,26 @@ def stackdist_eligible(tag_row, *, quantum_cycles, bs_entries: int,
     return warm and unpreempted
 
 
+def stackdist_cold_eligible(*, quantum_cycles, max_miss_latency: int,
+                            bs_miss_extra: int, total_steps: int) -> bool:
+    """True iff the stacked cold-bitstream pass is exact for this run.
+
+    Gates `repro.core.stackdist_cold`: `stackdist_eligible`'s unpreempted
+    + no-overflow conditions with the warm-bitstream-cache condition
+    *dropped* — the second Mattson pass over the disambiguator's miss
+    subsequence serves ANY bitstream capacity exactly, so an undersized
+    (cold) bitstream cache no longer forces the scan as long as the run
+    is unpreempted (preempted + cold remains the scan's last stronghold:
+    there the miss subsequence itself is switch-point-dependent per grid
+    cell AND the bitstream axis feeds back into the switch points).
+    """
+    worst_step = (int(np.max(isa.INSTR_HW_CYCLES)) + int(max_miss_latency)
+                  + int(bs_miss_extra))
+    min_quantum = int(np.min(np.asarray(quantum_cycles)))
+    return (min_quantum >= NO_PREEMPT_QUANTUM
+            and total_steps * worst_step < min_quantum)
+
+
 def interleaved_eligible(tag_table, *, bs_entries: int, miss_latencies,
                          bs_miss_extra: int, handler_cycles: int,
                          total_steps: int) -> bool:
@@ -297,9 +337,13 @@ def interleaved_eligible(tag_table, *, bs_entries: int, miss_latencies,
        access, summed over `total_steps`, stays inside int32 — the same
        accumulators the scan uses.
 
-    Resumed (`state=`) runs are never eligible: the engine replays from a
-    cold merged stream, so the dispatchers route them to the scan before
-    consulting this predicate.
+    Resumed (`state=`) runs are eligible too: the engine seeds from a
+    `FleetState` (see `repro.core.stackdist_interleaved.resume_preempted`)
+    provided the state is scan-shaped (`_seedable_fleet_state`: prefix
+    packing, distinct LRU clocks, slot residents covered by the bitstream
+    cache) and the seed's counters leave int32 headroom for the segment —
+    `simulate_many` checks both on top of this predicate and falls back
+    to the scan for hand-crafted states that fail them.
     """
     num_tags = int(np.max(tag_table)) + 1
     warm = bs_entries >= num_tags
@@ -322,6 +366,11 @@ _INTERLEAVED_AUTO_MIN_QUANTUM = 256
 # per fleet (the fleet axis is chunked separately, see
 # _sweep_fleet_interleaved)
 _INTERLEAVED_CHUNK_ELEMS = 16_000_000
+# fleet batches are padded up to a multiple of this before hitting the
+# interleaved sweep, so batch-size churn (contention-model pricing calls
+# with B = 1..8) reuses one compiled shape; padded rows are replays of
+# fleet 0 and are sliced off the result
+_INTERLEAVED_BATCH_BUCKET = 4
 
 
 def _interleaved_window(quanta_grid, total_steps: int,
@@ -344,26 +393,34 @@ def _interleaved_auto_ok(quanta_grid, grid_cells: int, num_tags: int,
             <= _INTERLEAVED_CHUNK_ELEMS)
 
 
-def _check_single_path(path: str, eligible: bool) -> str:
-    """Path validation for the single-program entry points, which only
-    dispatch between the unpreempted stack-distance engine and the scan."""
+def _check_single_path(path: str, eligible: bool,
+                       cold_ok: bool = False) -> str:
+    """Path validation for the single-program entry points, which dispatch
+    between the unpreempted stack-distance engines (warm / stacked-cold)
+    and the scan."""
     if path == "interleaved":
         raise ValueError(
             "interleaved path is not served by the single-program entry "
             "points (a solo run is never preempted; the unpreempted "
             "stack-distance engine already collapses its grid) — use "
             "simulate_many or sweep_fleet to force it")
-    return _check_path(path, eligible)
+    return _check_path(path, eligible, cold_ok=cold_ok)
 
 
 def _check_path(path: str, stackdist_ok: bool, interleaved_ok: bool = False,
-                interleaved_auto: bool = False) -> str:
-    if path not in ("auto", "stackdist", "interleaved", "scan"):
+                interleaved_auto: bool = False,
+                cold_ok: bool = False) -> str:
+    if path not in ("auto", "stackdist", "stackdist_cold", "interleaved",
+                    "scan"):
         raise ValueError(f"unknown path {path!r}")
     if path == "stackdist" and not stackdist_ok:
         raise ValueError(
             "stack-distance path requires an unpreempted run with a warm "
             "bitstream cache (see simulator.stackdist_eligible)")
+    if path == "stackdist_cold" and not cold_ok:
+        raise ValueError(
+            "stacked cold-bitstream path requires an unpreempted run with "
+            "int32-safe costs (see simulator.stackdist_cold_eligible)")
     if path == "interleaved" and not interleaved_ok:
         raise ValueError(
             "interleaved path requires a one-shot run with a warm "
@@ -372,6 +429,7 @@ def _check_path(path: str, stackdist_ok: bool, interleaved_ok: bool = False,
             "simulator.interleaved_eligible)")
     if path == "auto":
         path = ("stackdist" if stackdist_ok
+                else "stackdist_cold" if cold_ok
                 else "interleaved" if interleaved_ok and interleaved_auto
                 else "scan")
     return path
@@ -407,17 +465,34 @@ def _single_eligible(cfg: ReconfigConfig, scenario: isa.SlotScenario,
         bs_miss_extra=cfg.bs_miss_extra, total_steps=total_steps)
 
 
+def _single_cold_eligible(cfg: ReconfigConfig, max_miss_latency: int,
+                          total_steps: int) -> bool:
+    return stackdist_cold_eligible(
+        quantum_cycles=NO_PREEMPT_QUANTUM, max_miss_latency=max_miss_latency,
+        bs_miss_extra=cfg.bs_miss_extra, total_steps=total_steps)
+
+
 def simulate_single(trace: np.ndarray, cfg: ReconfigConfig,
                     scenario: isa.SlotScenario,
                     path: str = "auto") -> SimResult:
     trace = jnp.asarray(trace, jnp.int32)
     eligible = _single_eligible(cfg, scenario, cfg.miss_latency,
                                 trace.shape[0])
-    if _check_single_path(path, eligible) == "stackdist":
+    cold_ok = _single_cold_eligible(cfg, cfg.miss_latency, trace.shape[0])
+    chosen = _check_single_path(path, eligible, cold_ok)
+    if chosen == "stackdist":
         cycles, misses, bs = stackdist.lanes_unpreempted(
             trace[None, :], scenario.instr_tag, isa.INSTR_HW_CYCLES,
             jnp.int32(cfg.num_slots), jnp.asarray([cfg.miss_latency]),
             jnp.int32(cfg.bs_miss_extra),
+            num_tags=max(scenario.num_tags, 1), total_steps=trace.shape[0])
+        return SimResult(cycles[0], jnp.int32(trace.shape[0]), misses[0],
+                         bs[0])
+    if chosen == "stackdist_cold":
+        cycles, misses, bs = stackdist_cold.lanes_cold(
+            trace[None, :], scenario.instr_tag, isa.INSTR_HW_CYCLES,
+            jnp.int32(cfg.num_slots), jnp.asarray([cfg.miss_latency]),
+            jnp.int32(cfg.bs_cache_entries), jnp.int32(cfg.bs_miss_extra),
             num_tags=max(scenario.num_tags, 1), total_steps=trace.shape[0])
         return SimResult(cycles[0], jnp.int32(trace.shape[0]), misses[0],
                          bs[0])
@@ -435,25 +510,38 @@ def simulate_single_batch(traces: np.ndarray, miss_latencies: np.ndarray,
                           path: str = "auto") -> SimResult:
     """vmap over (trace, miss latency) lanes with a shared scenario.
 
-    Eligible lanes (warm bitstream cache — a single program is never
-    preempted) route through one stack-distance profile per lane instead of
-    one `lax.scan` per lane."""
+    Eligible lanes (a single program is never preempted) route through one
+    stack-distance profile per lane — warm bitstream caches take the plain
+    pass, cold ones the stacked pass — instead of one `lax.scan` per
+    lane."""
     traces = jnp.asarray(traces, jnp.int32)
     lats = jnp.asarray(miss_latencies, jnp.int32)
-    eligible = _single_eligible(cfg, scenario,
-                                int(np.max(np.asarray(miss_latencies))),
-                                traces.shape[-1])
-    if _check_single_path(path, eligible) == "stackdist":
+    max_lat = int(np.max(np.asarray(miss_latencies)))
+    eligible = _single_eligible(cfg, scenario, max_lat, traces.shape[-1])
+    cold_ok = _single_cold_eligible(cfg, max_lat, traces.shape[-1])
+    chosen = _check_single_path(path, eligible, cold_ok)
+    if chosen in ("stackdist", "stackdist_cold"):
         chunk = _stackdist_chunk(traces.shape[-1],
                                  max(scenario.num_tags, 1))
-        outs = [
-            stackdist.lanes_unpreempted(
-                traces[i:i + chunk], scenario.instr_tag,
-                isa.INSTR_HW_CYCLES, jnp.int32(cfg.num_slots),
-                lats[i:i + chunk], jnp.int32(cfg.bs_miss_extra),
-                num_tags=max(scenario.num_tags, 1),
-                total_steps=traces.shape[-1])
-            for i in range(0, traces.shape[0], chunk)]
+        if chosen == "stackdist":
+            def lanes(tr, la):
+                return stackdist.lanes_unpreempted(
+                    tr, scenario.instr_tag, isa.INSTR_HW_CYCLES,
+                    jnp.int32(cfg.num_slots), la,
+                    jnp.int32(cfg.bs_miss_extra),
+                    num_tags=max(scenario.num_tags, 1),
+                    total_steps=traces.shape[-1])
+        else:
+            def lanes(tr, la):
+                return stackdist_cold.lanes_cold(
+                    tr, scenario.instr_tag, isa.INSTR_HW_CYCLES,
+                    jnp.int32(cfg.num_slots), la,
+                    jnp.int32(cfg.bs_cache_entries),
+                    jnp.int32(cfg.bs_miss_extra),
+                    num_tags=max(scenario.num_tags, 1),
+                    total_steps=traces.shape[-1])
+        outs = [lanes(traces[i:i + chunk], lats[i:i + chunk])
+                for i in range(0, traces.shape[0], chunk)]
         cycles, misses, bs = (jnp.concatenate(x) for x in zip(*outs))
         instrs = jnp.full(cycles.shape, traces.shape[-1], jnp.int32)
         return SimResult(cycles, instrs, misses, bs)
@@ -601,6 +689,224 @@ def fleet_tag_table(scenarios, num_programs: int) -> np.ndarray:
     return np.stack([s.instr_tag for s in scenarios])
 
 
+# ---------------------------------------------------------------------------
+# FleetState <-> interleaved-engine translation (the resumable fast path)
+# ---------------------------------------------------------------------------
+
+
+def _canonical_state(state: FleetState) -> FleetState:
+    """Behaviour-preserving canonical cache arrangement: residents sorted
+    by LRU clock (`last_use`) ascending into a prefix, empty entries
+    (tag -1, last_use 0) as the suffix, clocks untouched.
+
+    Exact-LRU behaviour depends only on the resident (tag, last_use) set —
+    hits are membership tests, the victim is argmin(last_use) with empties
+    preferred, fills take the first empty — never on physical entry order
+    (`slots._access`).  Canonicalising every returned `FleetState` makes
+    states comparable across engines: the interleaved engine recovers the
+    resident *sets* and clocks exactly but not the scan's incidental fill
+    order, so both report this shared normal form.  Ties in `last_use`
+    (impossible in real scan states, whose filled clocks are distinct)
+    keep their original relative order (stable sort), preserving the
+    scan's lowest-index-victim tiebreak.
+    """
+    def canon(st: slots.SlotState) -> slots.SlotState:
+        tags = np.asarray(st.tags)
+        lu = np.asarray(st.last_use)
+        filled = tags >= 0
+        k = int(filled.sum())
+        order = np.argsort(lu[filled], kind="stable")
+        t = np.full(tags.shape, -1, np.int32)
+        u = np.zeros(lu.shape, np.int32)
+        t[:k] = tags[filled][order]
+        u[:k] = lu[filled][order]
+        return slots.SlotState(tags=jnp.asarray(t), last_use=jnp.asarray(u),
+                               clock=st.clock)
+
+    return state._replace(slot_st=canon(state.slot_st),
+                          bs_st=canon(state.bs_st))
+
+
+def _seedable_fleet_state(state: FleetState, num_tags: int,
+                          worst_step: int, total_steps: int) -> bool:
+    """True iff the interleaved engine can seed from this `FleetState`.
+
+    Any state an actual scan produced qualifies; the conditions only
+    exclude hand-crafted states whose cache geometry no LRU run can reach
+    (those silently fall back to the scan under `path="auto"`):
+
+      * both caches prefix-packed with distinct resident tags in
+        `[0, num_tags)` and distinct LRU clocks no later than the cache
+        clock (scan fills always pack a prefix, clocks are unique);
+      * slot residents all bitstream-resident, and a non-full
+        disambiguator implies identical resident sets (no eviction can
+        have happened before the cache filled) — this is what lets the
+        seed order evicted tags below residents without knowing the
+        true eviction history;
+      * int32 headroom: the seed's counters/cursors/clocks plus a
+        worst-case segment stay below int32 (the scan tolerates silent
+        wraparound only in the sense that nothing guards it; the engine
+        refuses to seed rather than diverge).
+    """
+    def cache(st: slots.SlotState):
+        tags = np.asarray(st.tags)
+        lu = np.asarray(st.last_use).astype(np.int64)
+        filled = tags >= 0
+        k = int(filled.sum())
+        if not (np.all(tags[:k] >= 0) and np.all(tags[k:] < 0)):
+            return None
+        res = tags[:k]
+        if k and (int(res.max()) >= num_tags
+                  or len(np.unique(res)) != k
+                  or len(np.unique(lu[:k])) != k
+                  or int(lu[:k].max()) > int(st.clock)
+                  or int(lu[:k].min()) < 0):
+            return None
+        return res
+
+    slot_res = cache(state.slot_st)
+    bs_res = cache(state.bs_st)
+    if slot_res is None or bs_res is None:
+        return False
+    if not np.isin(slot_res, bs_res).all():
+        return False
+    full = slot_res.size == np.asarray(state.slot_st.tags).size
+    if not full and slot_res.size != bs_res.size:
+        return False
+    lim = np.iinfo(np.int32).max
+    top = max(int(state.q_cycles), int(state.switches),
+              *(int(np.max(np.asarray(x))) for x in
+                (state.cycles, state.instrs, state.misses, state.bs_misses)))
+    return (top + total_steps * worst_step < lim
+            and int(np.max(np.asarray(state.cursors))) + total_steps < lim
+            and int(state.slot_st.clock) + total_steps < lim
+            and int(state.bs_st.clock) + total_steps < lim)
+
+
+def _seed_carry(state: FleetState,
+                num_tags: int) -> stackdist_interleaved.CellCarry:
+    """Translate a (seedable) `FleetState` into engine coordinates.
+
+    Cache contents become the virtual per-tag position block `[0,
+    num_tags)` below all segment positions: evicted-but-bitstream-resident
+    tags at the bottom (their next access must re-fault at every slot
+    count — the disambiguator is provably full whenever they exist — and
+    they are not cold), disambiguator residents above them ordered by LRU
+    clock, untouched tags -1.  Scheduler state and counters seed the
+    carry verbatim.
+    """
+    slot_tags = np.asarray(state.slot_st.tags)
+    slot_lu = np.asarray(state.slot_st.last_use).astype(np.int64)
+    bs_tags = np.asarray(state.bs_st.tags)
+    filled = slot_tags >= 0
+    residents = slot_tags[filled][np.argsort(slot_lu[filled])]
+    evicted = np.setdiff1d(bs_tags[bs_tags >= 0], residents)
+    last_pos = np.full((num_tags,), -1, np.int32)
+    last_pos[evicted] = np.arange(evicted.size, dtype=np.int32)
+    last_pos[residents] = evicted.size + np.arange(residents.size,
+                                                   dtype=np.int32)
+    return stackdist_interleaved.CellCarry(
+        last_pos=jnp.asarray(last_pos),
+        last_miss_pos=jnp.full((num_tags,), -1, jnp.int32),
+        cursors=state.cursors, sched_idx=state.sched_idx,
+        steps_done=jnp.int32(0), q_cycles=state.q_cycles,
+        cycles=state.cycles, instrs=state.instrs, misses=state.misses,
+        bs_misses=state.bs_misses, switches=state.switches)
+
+
+def _state_from_final(final: stackdist_interleaved.CellCarry,
+                      seed_state: FleetState, num_slots: int,
+                      bs_entries: int, num_tags: int,
+                      total_steps: int) -> FleetState:
+    """Rebuild the canonical `FleetState` from the engine's final carry.
+
+    Both cache clocks advance by exactly one per access (the bitstream
+    clock ticks on every `lookup_fused` step too, tag -1 or hit or not),
+    so clock' = seed clock + steps.  A touched tag's LRU clock is the
+    scan clock value of its last access — seed clock plus its 1-based
+    segment step index, i.e. `last_pos - num_tags + 1` — and untouched
+    tags keep their seed clock; the bitstream cache is touched exactly on
+    slot misses, so its clocks come from `last_miss_pos` the same way.
+    Residency: the disambiguator holds the `num_slots` most recent
+    distinct tags of the merged stream (seed block included), the warm
+    bitstream cache holds every tag ever present.  Entries pack in
+    canonical order (`_canonical_state`'s normal form) directly.
+    """
+    offset = num_tags
+    last_pos = np.asarray(final.last_pos, dtype=np.int64)
+    last_miss = np.asarray(final.last_miss_pos, dtype=np.int64)
+    seed_slot_clock = int(seed_state.slot_st.clock)
+    seed_bs_clock = int(seed_state.bs_st.clock)
+
+    def lu_map(st: slots.SlotState) -> np.ndarray:
+        m = np.zeros((num_tags,), np.int64)
+        tags = np.asarray(st.tags)
+        f = tags >= 0
+        m[tags[f]] = np.asarray(st.last_use, np.int64)[f]
+        return m
+
+    slot_lu = np.where(last_pos >= offset,
+                       seed_slot_clock + (last_pos - offset) + 1,
+                       lu_map(seed_state.slot_st))
+    bs_lu = np.where(last_miss >= 0,
+                     seed_bs_clock + (last_miss - offset) + 1,
+                     lu_map(seed_state.bs_st))
+    present = np.nonzero(last_pos >= 0)[0]
+    by_recency = present[np.argsort(last_pos[present])]
+    slot_res = by_recency[-num_slots:]   # ascending position = ascending lu
+    bs_res = present[np.argsort(bs_lu[present])]
+
+    def pack(res: np.ndarray, lu: np.ndarray, size: int,
+             clock: int) -> slots.SlotState:
+        t = np.full((size,), -1, np.int32)
+        u = np.zeros((size,), np.int32)
+        t[:res.size] = res
+        u[:res.size] = lu[res].astype(np.int32)
+        return slots.SlotState(tags=jnp.asarray(t), last_use=jnp.asarray(u),
+                               clock=jnp.int32(clock))
+
+    return FleetState(
+        slot_st=pack(slot_res, slot_lu, num_slots,
+                     seed_slot_clock + total_steps),
+        bs_st=pack(bs_res, bs_lu, bs_entries, seed_bs_clock + total_steps),
+        cursors=final.cursors, sched_idx=final.sched_idx,
+        q_cycles=final.q_cycles, cycles=final.cycles, instrs=final.instrs,
+        misses=final.misses, bs_misses=final.bs_misses,
+        switches=final.switches)
+
+
+def _engine_num_tags(table: np.ndarray, state: FleetState | None) -> int:
+    """Static tag-alphabet size for the interleaved engine: the fleet's
+    table plus any *stale* resident tags a carried state may hold from
+    scenarios no longer in the fleet — stale residents still occupy real
+    LRU stack positions, so the engine must model them."""
+    nt = int(np.max(table)) + 1
+    if state is not None:
+        for st in (state.slot_st, state.bs_st):
+            t = np.asarray(st.tags)
+            if t.size and int(t.max()) >= 0:
+                nt = max(nt, int(t.max()) + 1)
+    return max(nt, 1)
+
+
+def _resume_fleet_interleaved(traces, table, cfg: ReconfigConfig, quanta,
+                              schedule, handler, seed_state: FleetState,
+                              total_steps: int, num_tags: int):
+    """Run one resumable interleaved cell from a `FleetState` seed ->
+    (FleetResult, final CellCarry)."""
+    w = _interleaved_window(quanta, total_steps, None)
+    final = stackdist_interleaved.resume_preempted(
+        traces, jnp.asarray(table, jnp.int32), isa.INSTR_HW_CYCLES,
+        jnp.int32(cfg.num_slots), jnp.int32(cfg.miss_latency),
+        jnp.asarray(quanta, jnp.int32), jnp.asarray(schedule, jnp.int32),
+        jnp.int32(handler), jnp.int32(cfg.bs_miss_extra),
+        _seed_carry(seed_state, num_tags),
+        num_tags=num_tags, total_steps=total_steps, window=w)
+    res = FleetResult(final.cycles, final.instrs, final.misses,
+                      final.bs_misses, final.switches)
+    return res, final
+
+
 def _fleet_step_fn(ptags, pcosts, miss_latency, active_slots, quanta,
                    schedule, handler, bs_miss_extra):
     """Round-robin step over precomputed per-program (tag, cost) streams.
@@ -718,14 +1024,19 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
     (results, S')".  A run split at any step boundary reproduces the
     one-shot run bit-for-bit (counters are cumulative in the state).
 
-    Dispatch: one-shot result-only calls (`state=None`,
-    `return_state=False`) with a warm bitstream cache route through the
-    interleave-aware fast path (`repro.core.stackdist_interleaved`) —
-    preempted or not — and are bit-for-bit equal to the scan.  Resumed
-    segments and calls that need the final `FleetState` always take the
-    cycle-by-cycle scan: the fast paths replay from a cold merged stream
-    and never materialise a scan carry.  `path="scan"|"interleaved"`
-    forces an engine ("interleaved" raises on resume/ineligible runs).
+    Dispatch: calls with a warm bitstream cache — one-shot, resumed
+    (`state=`), or `return_state=True` — route through the
+    interleave-aware fast path (`repro.core.stackdist_interleaved`),
+    preempted or not, and are bit-for-bit equal to the scan: the engine
+    seeds from the `FleetState` (a one-shot `return_state` run seeds from
+    the cold init state) and materialises the final state back out in
+    canonical form.  Hand-crafted states no scan could produce
+    (`_seedable_fleet_state`), cold bitstream caches, and sub-threshold
+    quanta fall back to the cycle-by-cycle scan, whose returned states
+    are canonicalised too (`_canonical_state` — behaviour-preserving, so
+    resumes and state comparisons never see which engine ran).
+    `path="scan"|"interleaved"` forces an engine ("interleaved" raises
+    on ineligible or unseedable runs).
     """
     traces = jnp.asarray(traces, jnp.int32)
     if traces.ndim != 2:
@@ -740,32 +1051,7 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
             f"unknown path {path!r} — simulate_many accepts "
             f"'auto'|'scan'|'interleaved' (solo unpreempted runs take the "
             f"stack-distance engine through simulate_single/sweep_fleet)")
-    one_shot = state is None and not return_state
-    if path == "interleaved" and not one_shot:
-        raise ValueError(
-            "interleaved path is one-shot result-only: it replays from a "
-            "cold merged stream and never materialises a FleetState — "
-            "resumed (state=) and return_state=True runs take the scan")
     quanta = sched.quanta(num_progs)
-    eligible = one_shot and interleaved_eligible(
-        table, bs_entries=cfg.bs_cache_entries,
-        miss_latencies=[cfg.miss_latency], bs_miss_extra=cfg.bs_miss_extra,
-        handler_cycles=sched.handler_cycles, total_steps=total_steps)
-    if path == "interleaved" and not eligible:
-        raise ValueError(
-            "interleaved path requires a warm bitstream cache over the "
-            "fleet's merged tag set and non-negative int32-safe costs "
-            "(see simulator.interleaved_eligible)")
-    if path == "interleaved" or (
-            path == "auto" and eligible and _interleaved_auto_ok(
-                quanta[None, :], 1, int(np.max(table)) + 1, total_steps,
-                None)):
-        res = _sweep_fleet_interleaved(
-            traces[None], table, jnp.asarray([cfg.miss_latency], jnp.int32),
-            jnp.asarray([cfg.num_slots], jnp.int32), quanta[None, :],
-            schedule, sched.handler_cycles, cfg.bs_miss_extra, total_steps,
-            None)
-        return FleetResult(*(x[0, 0, 0, 0] for x in res))
     if state is not None:
         _check_fleet_state(state, num_progs, cfg.num_slots,
                            cfg.bs_cache_entries)
@@ -776,15 +1062,67 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                 f"{schedule.shape[0]} — resume must use a SchedulerConfig "
                 f"whose priority weights produce a schedule at least as "
                 f"long as the one the state was built under")
+    eligible = interleaved_eligible(
+        table, bs_entries=cfg.bs_cache_entries,
+        miss_latencies=[cfg.miss_latency], bs_miss_extra=cfg.bs_miss_extra,
+        handler_cycles=sched.handler_cycles, total_steps=total_steps)
+    if state is None and not return_state:
+        # one-shot result-only: no state to seed or materialise
+        if path == "interleaved" and not eligible:
+            raise ValueError(
+                "interleaved path requires a warm bitstream cache over the "
+                "fleet's merged tag set and non-negative int32-safe costs "
+                "(see simulator.interleaved_eligible)")
+        if path == "interleaved" or (
+                path == "auto" and eligible and _interleaved_auto_ok(
+                    quanta[None, :], 1, int(np.max(table)) + 1, total_steps,
+                    None)):
+            res = _sweep_fleet_interleaved(
+                traces[None], table,
+                jnp.asarray([cfg.miss_latency], jnp.int32),
+                jnp.asarray([cfg.num_slots], jnp.int32), quanta[None, :],
+                schedule, sched.handler_cycles, cfg.bs_miss_extra,
+                total_steps, None)
+            return FleetResult(*(x[0, 0, 0, 0] for x in res))
+    else:
+        # state-carrying: seed the resumable engine from the given state
+        # (or the cold init state for one-shot return_state runs)
+        seed_state = state if state is not None else init_fleet_state(
+            num_progs, cfg.num_slots, cfg.bs_cache_entries)
+        num_tags = _engine_num_tags(table, seed_state)
+        worst_step = (int(np.max(isa.INSTR_HW_CYCLES))
+                      + int(cfg.miss_latency) + int(cfg.bs_miss_extra)
+                      + int(sched.handler_cycles))
+        resumable = (eligible and cfg.bs_cache_entries >= num_tags
+                     and _seedable_fleet_state(seed_state, num_tags,
+                                               worst_step, total_steps))
+        if path == "interleaved" and not resumable:
+            raise ValueError(
+                "interleaved path requires a warm bitstream cache over the "
+                "fleet's merged tag set, non-negative int32-safe costs, "
+                "and a scan-shaped FleetState seed with int32 headroom "
+                "(see simulator.interleaved_eligible and "
+                "simulator._seedable_fleet_state)")
+        if path == "interleaved" or (
+                path == "auto" and resumable and _interleaved_auto_ok(
+                    quanta[None, :], 1, num_tags, total_steps, None)):
+            res, final = _resume_fleet_interleaved(
+                traces, table, cfg, quanta, schedule, sched.handler_cycles,
+                seed_state, total_steps, num_tags)
+            if not return_state:
+                return res
+            return res, _state_from_final(final, seed_state, cfg.num_slots,
+                                          cfg.bs_cache_entries, num_tags,
+                                          total_steps)
     res, final = _simulate_fleet(
         traces, table, jnp.int32(cfg.miss_latency),
         jnp.int32(cfg.num_slots),
-        jnp.asarray(sched.quanta(num_progs)),
+        jnp.asarray(quanta),
         jnp.asarray(schedule),
         jnp.int32(sched.handler_cycles), cfg.num_slots,
         cfg.bs_cache_entries, jnp.int32(cfg.bs_miss_extra), total_steps,
         scan_unroll, state)
-    return (res, final) if return_state else res
+    return (res, _canonical_state(final)) if return_state else res
 
 
 @functools.partial(
@@ -851,6 +1189,43 @@ def _sweep_fleet_stackdist(fleets, table, lats, counts, bs_miss_extra,
     )
 
 
+def _sweep_fleet_stackdist_cold(fleets, table, lats, counts, bs_entries,
+                                bs_miss_extra,
+                                total_steps: int) -> FleetResult:
+    """Assemble the scan-shaped FleetResult from the stacked cold pass.
+
+    Same unpreempted contract as `_sweep_fleet_stackdist` (program 0 only,
+    no switches), but the bitstream-miss count now varies with the slot
+    count — the cold cache sees a different miss stream per S — so the
+    `bs_misses` field broadcasts over latencies only.  The per-slot-count
+    second pass multiplies the transient footprint by K, so the fleet
+    chunking divides by it.
+    """
+    num_progs = fleets.shape[1]
+    num_tags = max(int(np.max(np.asarray(table[0]))) + 1, 1)
+    chunk = max(1, _stackdist_chunk(total_steps, num_tags)
+                // max(int(counts.shape[0]), 1))
+    grids = [
+        stackdist_cold.sweep_cold(
+            fleets[i:i + chunk, 0, :], table[0], isa.INSTR_HW_CYCLES,
+            counts, lats, jnp.asarray([bs_entries], jnp.int32),
+            jnp.asarray([bs_miss_extra], jnp.int32), num_tags=num_tags,
+            total_steps=total_steps)
+        for i in range(0, fleets.shape[0], chunk)]
+    cycles = jnp.concatenate([g.cycles[:, :, :, 0, 0] for g in grids])
+    slot_misses = jnp.concatenate([g.slot_misses for g in grids])
+    bs_misses = jnp.concatenate([g.bs_misses[:, :, 0] for g in grids])
+    b, k, l = cycles.shape
+    zeros = jnp.zeros((b, k, l, num_progs), jnp.int32)
+    return FleetResult(
+        cycles=zeros.at[..., 0].set(cycles),
+        instructions=zeros.at[..., 0].set(jnp.int32(total_steps)),
+        slot_misses=zeros.at[..., 0].set(slot_misses[:, :, None]),
+        bs_misses=zeros.at[..., 0].set(bs_misses[:, :, None]),
+        switches=jnp.zeros((b, k, l), jnp.int32),
+    )
+
+
 def _sweep_fleet_interleaved(fleets, table, lats, counts, quanta_grid,
                              schedule, handler, bs_miss_extra,
                              total_steps: int,
@@ -860,22 +1235,38 @@ def _sweep_fleet_interleaved(fleets, table, lats, counts, quanta_grid,
     Each cell replays its own switch points (they are cost-dependent), so
     nothing broadcasts — but the sequential depth per cell is scheduler
     windows, not steps.  The fleet axis is processed in memory-bounded
-    chunks (at most two compiled shapes: full + tail), mirroring
-    `_sweep_fleet_stackdist`.
+    chunks, mirroring `_sweep_fleet_stackdist`, and padded up to a bucket
+    size so repeat callers with varying batch sizes (the contention
+    model's candidate sweeps price groups in batches of 1..8) hit one
+    compiled shape instead of one per batch size — compiling this sweep
+    costs seconds, replaying a few padded cells costs milliseconds.
     """
     num_tags = max(int(np.max(np.asarray(table))) + 1, 1)
     w = _interleaved_window(quanta_grid, total_steps, window)
     cells = quanta_grid.shape[0] * counts.shape[0] * lats.shape[0]
     chunk = max(1, _INTERLEAVED_CHUNK_ELEMS // max(w * num_tags * cells, 1))
-    grids = [
-        stackdist_interleaved.sweep_preempted(
-            fleets[i:i + chunk], table, isa.INSTR_HW_CYCLES, counts, lats,
+    b_total = fleets.shape[0]
+    grids = []
+    for i in range(0, b_total, chunk):
+        part = jnp.asarray(fleets[i:i + chunk])
+        if b_total > chunk:
+            target = chunk          # tail rides the full-chunk shape
+        else:
+            target = min(-(-b_total // _INTERLEAVED_BATCH_BUCKET)
+                         * _INTERLEAVED_BATCH_BUCKET, chunk)
+        pad = target - part.shape[0]
+        if pad > 0:
+            part = jnp.concatenate(
+                [part, jnp.broadcast_to(part[:1],
+                                        (pad,) + part.shape[1:])], axis=0)
+        grids.append(stackdist_interleaved.sweep_preempted(
+            part, table, isa.INSTR_HW_CYCLES, counts, lats,
             jnp.asarray(quanta_grid, jnp.int32),
             jnp.asarray(schedule, jnp.int32), jnp.int32(handler),
             jnp.int32(bs_miss_extra), num_tags=num_tags,
-            total_steps=total_steps, window=w)
-        for i in range(0, fleets.shape[0], chunk)]
-    return FleetResult(*(jnp.concatenate([g[f] for g in grids], axis=1)
+            total_steps=total_steps, window=w))
+    return FleetResult(*(jnp.concatenate([g[f] for g in grids],
+                                         axis=1)[:, :b_total]
                          for f in range(5)))
 
 
@@ -898,16 +1289,20 @@ def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
     Dispatch (see module docstring): grids unpreempted at EVERY quantum
     cell with a warm bitstream cache (`stackdist_eligible`) collapse the
     K x L grid into one stack-distance pass per fleet (quantum cells are
-    then identical by construction and broadcast); preempted or mixed
-    grids with a fleet-warm bitstream cache (`interleaved_eligible`)
-    replay every cell's own interleaving at scheduler-window granularity
-    (`repro.core.stackdist_interleaved`; `interleave_window` overrides the
-    tuned window size, results identical for any value); everything else
-    runs the jitted vmap^4 of `lax.scan`s, where slot counts sweep by
-    masking one max-size disambiguator (`slots.lookup`'s `num_active`).
-    `path` forces a specific engine ("stackdist"/"interleaved" raise if
-    the grid is ineligible); all engines return bit-for-bit identical
-    results on eligible grids.
+    then identical by construction and broadcast); unpreempted grids with
+    a COLD bitstream cache take the stacked pass
+    (`stackdist_cold_eligible` / `repro.core.stackdist_cold`) instead of
+    the scan; preempted or mixed grids with a fleet-warm bitstream cache
+    (`interleaved_eligible`) replay every cell's own interleaving at
+    scheduler-window granularity (`repro.core.stackdist_interleaved`;
+    `interleave_window` overrides the tuned window size, results
+    identical for any value); everything else — now only preempted runs
+    with cold bitstream caches — runs the jitted vmap^4 of `lax.scan`s,
+    where slot counts sweep by masking one max-size disambiguator
+    (`slots.lookup`'s `num_active`).  `path` forces a specific engine
+    ("stackdist"/"stackdist_cold"/"interleaved" raise if the grid is
+    ineligible); all engines return bit-for-bit identical results on
+    eligible grids.
     """
     fleets = jnp.asarray(fleets, jnp.int32)
     if fleets.ndim != 3:
@@ -942,10 +1337,20 @@ def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
     inter_auto = _interleaved_auto_ok(
         quanta_grid, quanta_grid.shape[0] * counts.shape[0] * lats.shape[0],
         int(np.max(table)) + 1, total_steps, interleave_window)
-    chosen = _check_path(path, eligible, inter_eligible, inter_auto)
-    if chosen == "stackdist":
-        res = _sweep_fleet_stackdist(fleets, table, lats, counts,
-                                     bs_miss_extra, total_steps)
+    cold_eligible = stackdist_cold_eligible(
+        quantum_cycles=quanta_grid,
+        max_miss_latency=int(np.max(np.asarray(miss_latencies))),
+        bs_miss_extra=bs_miss_extra, total_steps=total_steps)
+    chosen = _check_path(path, eligible, inter_eligible, inter_auto,
+                         cold_eligible)
+    if chosen in ("stackdist", "stackdist_cold"):
+        if chosen == "stackdist":
+            res = _sweep_fleet_stackdist(fleets, table, lats, counts,
+                                         bs_miss_extra, total_steps)
+        else:
+            res = _sweep_fleet_stackdist_cold(
+                fleets, table, lats, counts, bs_cache_entries,
+                bs_miss_extra, total_steps)
         if quanta is None:
             return res
         # every quantum cell is unpreempted, so cells are identical:
@@ -970,6 +1375,81 @@ def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
     if quanta is None:
         return FleetResult(*(x[0] for x in res))
     return res
+
+
+def sweep_bitstream(traces: np.ndarray, scenario: isa.SlotScenario, *,
+                    slot_counts, miss_latencies, bs_entries, bs_miss_extras,
+                    total_steps: int,
+                    path: str = "auto") -> stackdist_cold.ColdGrid:
+    """Solo-program sweep over the full reconfiguration-cost design space:
+    {slot count x miss latency x bitstream capacity x bitstream penalty}.
+
+    traces: (B, N) int32 solo instruction traces, run unpreempted.
+    Returns a `stackdist_cold.ColdGrid` with (B, K, L, E, X) cycles,
+    (B, K) slot misses and (B, K, E) bitstream misses — the axes
+    `benchmarks/bitstream_study.py` studies, in one call.
+
+    Dispatch: eligible runs (`stackdist_cold_eligible` — unpreempted is
+    by construction here, so only the int32 guard matters) take the
+    stacked Mattson pass, one profile per (trace, slot count) serving the
+    whole capacity x penalty sub-grid; `path="scan"` forces one
+    cycle-by-cycle run per grid cell (the parity reference).
+    """
+    traces = jnp.asarray(traces, jnp.int32)
+    if traces.ndim != 2:
+        raise ValueError(
+            f"sweep_bitstream expects (B, N) solo traces, got shape "
+            f"{tuple(traces.shape)}")
+    counts = np.asarray(slot_counts, np.int32).reshape(-1)
+    lats = np.asarray(miss_latencies, np.int32).reshape(-1)
+    caps = np.asarray(bs_entries, np.int32).reshape(-1)
+    extras = np.asarray(bs_miss_extras, np.int32).reshape(-1)
+    cold_ok = stackdist_cold_eligible(
+        quantum_cycles=NO_PREEMPT_QUANTUM,
+        max_miss_latency=int(np.max(lats)),
+        bs_miss_extra=int(np.max(extras)), total_steps=total_steps)
+    if path not in ("auto", "stackdist_cold", "scan"):
+        raise ValueError(
+            f"unknown path {path!r} — sweep_bitstream accepts "
+            f"'auto'|'stackdist_cold'|'scan'")
+    if path == "stackdist_cold" and not cold_ok:
+        raise ValueError(
+            "stacked cold-bitstream path requires an unpreempted run with "
+            "int32-safe costs (see simulator.stackdist_cold_eligible)")
+    if path != "scan" and cold_ok:
+        return stackdist_cold.sweep_cold(
+            traces, scenario.instr_tag, isa.INSTR_HW_CYCLES,
+            jnp.asarray(counts), jnp.asarray(lats), jnp.asarray(caps),
+            jnp.asarray(extras), num_tags=max(scenario.num_tags, 1),
+            total_steps=total_steps)
+    # reference fallback: one scan per cell (slot/bitstream misses do not
+    # depend on the latency/penalty axes in an unpreempted run, so the
+    # counter fields come from the first L x X cell)
+    b = traces.shape[0]
+    shape = (b, counts.size, lats.size, caps.size, extras.size)
+    cycles = np.zeros(shape, np.int32)
+    slot_misses = np.zeros(shape[:2], np.int32)
+    bs_misses = np.zeros((b, counts.size, caps.size), np.int32)
+    for i in range(b):
+        stream = traces[i][jnp.remainder(
+            jnp.arange(total_steps, dtype=jnp.int32), traces.shape[-1])]
+        for k, s in enumerate(counts):
+            for e, cap in enumerate(caps):
+                for l, lat in enumerate(lats):
+                    for x, pen in enumerate(extras):
+                        r = simulate_single(
+                            stream,
+                            ReconfigConfig(num_slots=int(s),
+                                           miss_latency=int(lat),
+                                           bs_cache_entries=int(cap),
+                                           bs_miss_extra=int(pen)),
+                            scenario, path="scan")
+                        cycles[i, k, l, e, x] = int(r.cycles)
+                        slot_misses[i, k] = int(r.slot_misses)
+                        bs_misses[i, k, e] = int(r.bs_misses)
+    return stackdist_cold.ColdGrid(cycles=jnp.asarray(cycles),
+                                   slot_misses=jnp.asarray(slot_misses),
+                                   bs_misses=jnp.asarray(bs_misses))
 
 
 # --- pair path: the P=2 special case, kept as thin wrappers so the Fig. 7

@@ -50,10 +50,32 @@ reason the unpreempted path does: warm (entries >= distinct tags across
 shared, so tag streams merge) means the bitstream cache never evicts, a
 bitstream miss happens exactly on each tag's first (cold) touch in the
 merged stream, and the bitstream axis decouples from the slot-count
-axis.  Cold bitstream caches stay on the scan.  All arithmetic is int32
-like the scan, so eligible results are bit-for-bit identical
-(`repro.core.simulator.interleaved_eligible` guards warmth and int32
-overflow; parity is enforced by tests/test_stackdist_interleaved.py).
+axis.  Cold bitstream caches stay on the scan (preempted) or take the
+stacked pass of `repro.core.stackdist_cold` (unpreempted).  All
+arithmetic is int32 like the scan, so eligible results are bit-for-bit
+identical (`repro.core.simulator.interleaved_eligible` guards warmth and
+int32 overflow; parity is enforced by
+tests/test_stackdist_interleaved.py).
+
+**Resumable runs** (`resume_preempted`): a cell can also start from a
+scan `FleetState` instead of a cold stream.  The seed translates cache
+contents into the engine's coordinates — every tag gets a *virtual*
+last-occurrence position in a block `[0, num_tags)` placed below all
+segment positions: evicted-but-bitstream-resident tags take the bottom
+of the block (any access to them must re-fault: with a full
+disambiguator their stack distance is >= every slot count, and they are
+not cold, so no bitstream miss is charged), disambiguator residents sit
+above them ordered by LRU `last_use`, untouched tags stay -1 (their
+first touch is still the compulsory cold+bitstream miss).  Segment
+accesses then occupy positions `num_tags + step`, so one cummax pass
+recovers exactly the stack distances a seeded LRU cache would produce.
+The open quantum (`q_cycles`), scheduler cursor, per-program trace
+cursors and cumulative counters seed the carry directly.  To come back
+*out*, the cell additionally tracks each tag's last slot-miss position
+(`last_miss_pos`, the bitstream cache's own LRU clock input), which —
+together with `last_pos` — is enough to rebuild a `FleetState`
+bit-for-bit in canonical slot order (`repro.core.simulator` owns the
+translation in `_seed_carry` / `_state_from_final`).
 
 The window size `W` is a pure performance knob, not a correctness
 parameter: a quantum larger than the window simply spans several
@@ -69,7 +91,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["InterleavedGrid", "sweep_preempted"]
+__all__ = ["CellCarry", "InterleavedGrid", "resume_preempted",
+           "sweep_preempted"]
 
 
 class InterleavedGrid(NamedTuple):
@@ -83,37 +106,59 @@ class InterleavedGrid(NamedTuple):
     switches: jnp.ndarray      # (Q, B, K, L) int32
 
 
+class CellCarry(NamedTuple):
+    """One cell's loop carry — also the seed/result type of the resumable
+    entry.  Counters are cumulative, so a seeded run keeps accumulating
+    on top of the seed's values exactly like a resumed scan would.
+    `last_miss_pos` is live only when the cell materialises a resumable
+    state (`None` otherwise — an empty pytree node, so the one-shot
+    sweep's compiled carry is unchanged); seeds always pass -1s for it
+    (segment-local: only misses *since the seed* can move bitstream LRU
+    order, earlier order is recovered from the seed state itself)."""
+
+    last_pos: jnp.ndarray       # (num_tags,) merged-stream last occurrence
+    last_miss_pos: jnp.ndarray  # (num_tags,) last slot-miss occurrence
+    cursors: jnp.ndarray        # (P,) per-program trace cursor
+    sched_idx: jnp.ndarray      # () cursor into the priority schedule
+    steps_done: jnp.ndarray     # () committed accesses (merged position)
+    q_cycles: jnp.ndarray       # () cycles burnt in the open quantum
+    cycles: jnp.ndarray         # (P,) attributed cycles (incl. handler)
+    instrs: jnp.ndarray         # (P,)
+    misses: jnp.ndarray         # (P,) disambiguator misses
+    bs_misses: jnp.ndarray      # (P,) bitstream-cache misses
+    switches: jnp.ndarray       # () context switches
+
+
 def _simulate_cell(ptags, pcosts, num_active, miss_latency, quanta,
                    schedule, handler, bs_miss_extra, num_tags: int,
-                   total_steps: int, window: int):
+                   total_steps: int, window: int,
+                   seed: CellCarry | None = None,
+                   materialise: bool = False):
     """One grid cell: (P, N) pre-gathered tag/cost streams -> counters.
 
     Mirrors `simulator._fleet_step_fn`'s cost model exactly, one window
     per iteration instead of one access per scan step.  `num_active`,
     `miss_latency` and `quanta` are the cell's coordinates; `schedule`
     is the weighted round-robin turn order shared by the whole grid.
+
+    With a `seed` the cell resumes mid-run: segment positions shift up by
+    `num_tags` so the seed's virtual per-tag positions in `[0, num_tags)`
+    sit below every new access (see module docstring).  With
+    `materialise` (static) the carry additionally tracks per-tag last
+    slot-miss positions and the full final carry is returned instead of
+    the counter tuple.
     """
     num_progs, trace_len = ptags.shape
     tag_ids = jnp.arange(num_tags, dtype=jnp.int32)
     warange = jnp.arange(window, dtype=jnp.int32)
     sched_len = schedule.shape[0]
+    # seeded runs place segment accesses above the seed's virtual block
+    pos_base = num_tags if seed is not None else 0
 
-    class Carry(NamedTuple):
-        last_pos: jnp.ndarray   # (num_tags,) merged-stream last occurrence
-        cursors: jnp.ndarray    # (P,) per-program trace cursor
-        sched_idx: jnp.ndarray  # () cursor into the priority schedule
-        steps_done: jnp.ndarray  # () committed accesses (merged position)
-        q_cycles: jnp.ndarray   # () cycles burnt in the open quantum
-        cycles: jnp.ndarray     # (P,) attributed cycles (incl. handler)
-        instrs: jnp.ndarray     # (P,)
-        misses: jnp.ndarray     # (P,) disambiguator misses
-        bs_misses: jnp.ndarray  # (P,) bitstream-cache (= cold) misses
-        switches: jnp.ndarray   # () context switches
-
-    def cond(c: Carry):
+    def cond(c: CellCarry):
         return c.steps_done < total_steps
 
-    def body(c: Carry) -> Carry:
+    def body(c: CellCarry) -> CellCarry:
         p = schedule[c.sched_idx]
         idx = jnp.remainder(c.cursors[p] + warange, trace_len)
         w_tags = jnp.take(ptags[p], idx)
@@ -125,8 +170,10 @@ def _simulate_cell(ptags, pcosts, num_active, miss_latency, quanta,
         # window row; shifting by one row and flooring with the carried
         # last_pos yields the state each access observes
         pos = c.steps_done + warange
-        occ = jnp.where(w_tags[:, None] == tag_ids[None, :],
-                        pos[:, None], jnp.int32(-1))
+        if pos_base:
+            pos = jnp.int32(pos_base) + pos
+        match = w_tags[:, None] == tag_ids[None, :]
+        occ = jnp.where(match, pos[:, None], jnp.int32(-1))
         cm = jax.lax.cummax(occ, axis=0)
         prev = jnp.concatenate(
             [c.last_pos[None, :],
@@ -154,12 +201,21 @@ def _simulate_cell(ptags, pcosts, num_active, miss_latency, quanta,
         do_switch = any_exp & (n_exp <= remaining)
 
         committed = jnp.take(cm, n - 1, axis=0)   # per-tag last occ <= n-1
+        if materialise:
+            cm_miss = jax.lax.cummax(
+                jnp.where(match & miss[:, None], pos[:, None],
+                          jnp.int32(-1)), axis=0)
+            last_miss_pos = jnp.maximum(c.last_miss_pos,
+                                        jnp.take(cm_miss, n - 1, axis=0))
+        else:
+            last_miss_pos = c.last_miss_pos
         end_cum = jnp.take(cum, n - 1)
         run_cycles = (end_cum - c.q_cycles
                       + jnp.where(do_switch, handler, 0).astype(jnp.int32))
         in_run = warange < n
-        return Carry(
+        return CellCarry(
             last_pos=jnp.maximum(c.last_pos, committed),
+            last_miss_pos=last_miss_pos,
             cursors=c.cursors.at[p].add(n),
             sched_idx=jnp.where(do_switch,
                                 (c.sched_idx + 1) % sched_len,
@@ -175,14 +231,52 @@ def _simulate_cell(ptags, pcosts, num_active, miss_latency, quanta,
             switches=c.switches + do_switch.astype(jnp.int32),
         )
 
-    zeros_p = jnp.zeros((num_progs,), jnp.int32)
-    final = jax.lax.while_loop(cond, body, Carry(
-        last_pos=jnp.full((num_tags,), -1, jnp.int32),
-        cursors=zeros_p, sched_idx=jnp.int32(0), steps_done=jnp.int32(0),
-        q_cycles=jnp.int32(0), cycles=zeros_p, instrs=zeros_p,
-        misses=zeros_p, bs_misses=zeros_p, switches=jnp.int32(0)))
+    if seed is None:
+        zeros_p = jnp.zeros((num_progs,), jnp.int32)
+        init = CellCarry(
+            last_pos=jnp.full((num_tags,), -1, jnp.int32),
+            last_miss_pos=(jnp.full((num_tags,), -1, jnp.int32)
+                           if materialise else None),
+            cursors=zeros_p, sched_idx=jnp.int32(0), steps_done=jnp.int32(0),
+            q_cycles=jnp.int32(0), cycles=zeros_p, instrs=zeros_p,
+            misses=zeros_p, bs_misses=zeros_p, switches=jnp.int32(0))
+    else:
+        init = seed._replace(
+            last_miss_pos=jnp.full((num_tags,), -1, jnp.int32),
+            steps_done=jnp.int32(0))
+    final = jax.lax.while_loop(cond, body, init)
+    if materialise:
+        return final
     return (final.cycles, final.instrs, final.misses, final.bs_misses,
             final.switches)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_tags", "total_steps", "window"))
+def resume_preempted(fleet: jnp.ndarray, tag_table: jnp.ndarray,
+                     instr_costs: jnp.ndarray, num_active, miss_latency,
+                     quanta: jnp.ndarray, schedule: jnp.ndarray, handler,
+                     bs_miss_extra, seed: CellCarry, *, num_tags: int,
+                     total_steps: int, window: int) -> CellCarry:
+    """One resumable cell: (P, N) traces + engine-coordinate seed ->
+    final `CellCarry` (cumulative counters plus the per-tag occurrence
+    vectors `repro.core.simulator._state_from_final` turns back into a
+    `FleetState`).  The seed is built by `simulator._seed_carry`; its
+    `last_miss_pos`/`steps_done` fields are ignored (reset to -1/0)."""
+    table = jnp.asarray(tag_table, jnp.int32)
+    costs = jnp.asarray(instr_costs, jnp.int32)
+    fleet = jnp.asarray(fleet, jnp.int32)
+    ptags = jnp.take_along_axis(table, fleet, axis=1)
+    pcosts = costs[fleet]
+    return _simulate_cell(ptags, pcosts,
+                          jnp.asarray(num_active, jnp.int32),
+                          jnp.asarray(miss_latency, jnp.int32),
+                          jnp.asarray(quanta, jnp.int32),
+                          jnp.asarray(schedule, jnp.int32),
+                          jnp.asarray(handler, jnp.int32),
+                          jnp.asarray(bs_miss_extra, jnp.int32),
+                          num_tags, total_steps, window,
+                          seed=seed, materialise=True)
 
 
 @functools.partial(jax.jit,

@@ -35,13 +35,16 @@ beating never-migrate on worst-tenant slowdown while migrating less than
 always-rebalance; `repro.serve.engine.SlotServeEngine.serve_online` wires
 the loop into the serving layer.
 
-Cost structure per epoch: the re-solve and every move's contention-delta
-pricing go through the `ContentionModel`, whose one-shot preempted sweeps
-ride the interleave-aware stack-distance fast path
-(`repro.core.stackdist_interleaved`) — the dominant cost of an epoch with
-churn.  Only the epoch *advance* and the migration-penalty probes resume
-explicit `FleetState`s and therefore stay on the cycle-by-cycle scan
-(resumed segments are never fast-path eligible).
+Cost structure per epoch: every simulation the loop issues now rides the
+interleave-aware stack-distance engine
+(`repro.core.stackdist_interleaved`).  The re-solve and every move's
+contention-delta pricing go through the `ContentionModel`'s one-shot
+preempted sweeps; the epoch *advance* and the migration-penalty probes
+resume explicit `FleetState`s and ride the engine's *resumable* entry
+(`simulate_many(..., state=S, return_state=True)` seeds the engine from S
+and materialises S' back out, bit-for-bit equal to the scan).  The
+cycle-by-cycle scan only returns for caches no scan could have produced
+or cold bitstream caches — neither occurs in this loop.
 """
 from __future__ import annotations
 

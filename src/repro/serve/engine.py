@@ -200,7 +200,11 @@ class SlotServeEngine:
         slot/bitstream state per core across epochs and, under the default
         "warm" policy, migrates a tenant only when the predicted
         contention saving beats the measured warm-state migration penalty.
-        Returns the `OnlineReport`.  With `apply_core=<i>` the engine
+        Every epoch is 100% fast path: the per-epoch advances and the
+        migration probes resume `FleetState`s through the interleaved
+        engine's resumable entry, and the contention model's one-shot
+        sweeps ride its windowed entry — no cycle-by-cycle scan anywhere
+        in the loop.  Returns the `OnlineReport`.  With `apply_core=<i>` the engine
         afterwards restricts itself to the tenants the final placement
         left on that core (deferred/other-core tenants are parked like
         `apply_admission` does).

@@ -40,3 +40,22 @@ def route_spy(monkeypatch):
 
     monkeypatch.setattr(simulator, "_sweep_fleet_interleaved", spy)
     return calls
+
+
+@pytest.fixture
+def resume_spy(monkeypatch):
+    """Record every dispatch into the *resumable* interleaved entry (the
+    state-seeding/materialising path of simulate_many), then delegate —
+    shared by the resume-dispatch tests (test_resume_fastpath.py) and the
+    online-layer wiring tests."""
+    from repro.core import simulator
+
+    calls = []
+    real = simulator._resume_fleet_interleaved
+
+    def spy(*args, **kwargs):
+        calls.append(args)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(simulator, "_resume_fleet_interleaved", spy)
+    return calls

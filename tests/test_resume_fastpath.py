@@ -1,0 +1,245 @@
+"""Resumable interleaved engine + stacked cold-bitstream pass: parity pins.
+
+Two scan strongholds fell in this refactor, and this module pins both to
+the cycle-by-cycle reference with exact integer equality:
+
+  * **FleetState round-tripping** — `simulate_many(..., state=S,
+    return_state=True)` now seeds the interleave-aware engine from S and
+    materialises S' back out.  The tests assert that an engine-resumed
+    segment equals the scan-resumed segment bit-for-bit INCLUDING the
+    returned state's LRU clocks and bitstream-cache contents, across
+    preempted P>=3 fleets, heterogeneous quanta + priorities, and
+    mid-quantum split points; that auto routes resumed calls through the
+    resumable entry (`resume_spy`, tests/conftest.py); and that
+    hand-crafted states no scan could produce still fall back to the scan.
+
+  * **Cold bitstream caches on unpreempted runs** — the stacked Mattson
+    pass (`repro.core.stackdist_cold`) re-profiles the disambiguator's
+    miss subsequence as its own LRU stream, serving every bitstream
+    capacity from one profile.  The tests pin `simulator.sweep_bitstream`
+    and the single-program entries to the scan, including
+    `benchmarks/bitstream_study.py`'s exact rows at a reduced trace
+    length.
+
+The equality contract is shared with every other engine-parity suite via
+tests/fleet_asserts.py: bit-for-bit integers, never closeness.
+"""
+import jax
+import numpy as np
+import pytest
+from fleet_asserts import assert_fleet_equal
+
+from repro.core import isa, simulator, traces
+
+CFG = simulator.ReconfigConfig(num_slots=4, miss_latency=50)
+
+
+def _fleet(p=3, n=4_000):
+    return np.stack([traces.build_trace(b, n) for b in
+                     ["minver", "nbody", "crc32", "cubic"][:p]])
+
+
+def assert_state_equal(a, b):
+    """Exact leaf-by-leaf FleetState equality (both engines return states
+    in canonical form, so this never sees which engine ran)."""
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# seeded resume: engine == scan, bit for bit, state included
+# ---------------------------------------------------------------------------
+
+SCHEDS = [
+    pytest.param(simulator.SchedulerConfig(quantum_cycles=1_500),
+                 id="uniform-q1500-p3"),
+    pytest.param(simulator.SchedulerConfig(quantum_cycles=(900, 2_100, 1_400),
+                                           priorities=(2, 1, 3)),
+                 id="hetero-quanta-prio-p3"),
+]
+
+
+@pytest.mark.parametrize("sched", SCHEDS)
+@pytest.mark.parametrize("split", [1, 137, 2_500, 8_999])
+def test_seeded_resume_equals_scan_resume(sched, split):
+    """Split a preempted P=3 run at `split` (137 and 2_500 land
+    mid-quantum), resume the tail on both engines, and require identical
+    results AND identical final states — slot/bitstream tags, LRU
+    clocks, cursors, scheduler state, every counter."""
+    tr = _fleet(3)
+    total = 9_000
+    _, s1 = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, split,
+                                    return_state=True, path="scan")
+    fast, sf = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
+                                       total - split, state=s1,
+                                       return_state=True,
+                                       path="interleaved")
+    scan, ss = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
+                                       total - split, state=s1,
+                                       return_state=True, path="scan")
+    assert int(fast.switches) > 0         # genuinely preempted
+    assert_fleet_equal(fast, scan)
+    assert_state_equal(sf, ss)
+    # and the engine-resumed split equals the engine's one-shot run
+    one, so = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, total,
+                                      return_state=True, path="interleaved")
+    assert_fleet_equal(fast, one)
+    assert_state_equal(sf, so)
+
+
+def test_auto_resume_rides_resumable_engine(resume_spy):
+    """Auto dispatch: return_state and state= calls take the resumable
+    entry, and a mid-quantum seed (q_cycles > 0) round-trips exactly."""
+    tr = _fleet(2)
+    sched = simulator.SchedulerConfig(quantum_cycles=2_000)
+    assert not resume_spy
+    _, st = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 2_500,
+                                    return_state=True)
+    assert len(resume_spy) == 1
+    assert int(st.q_cycles) > 0           # the split landed mid-quantum
+    res = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 1_000,
+                                  state=st)
+    assert len(resume_spy) == 2
+    scan = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 1_000,
+                                   state=st, path="scan")
+    assert_fleet_equal(res, scan)
+
+
+def test_hand_crafted_unseedable_state_falls_back_to_scan(resume_spy):
+    """A slot resident missing from the bitstream cache: no scan with a
+    warm bitstream cache can produce this state, so the engine cannot
+    seed from it — auto must keep the scan (exactly), and forcing the
+    engine must refuse."""
+    import jax.numpy as jnp
+    tr = _fleet(2)
+    sched = simulator.SchedulerConfig(quantum_cycles=2_000)
+    st = simulator.init_fleet_state(2, CFG.num_slots, CFG.bs_cache_entries)
+    st = st._replace(slot_st=st.slot_st._replace(
+        tags=st.slot_st.tags.at[0].set(3),
+        last_use=st.slot_st.last_use.at[0].set(1),
+        clock=jnp.int32(2)))
+    res = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 2_000,
+                                  state=st)
+    assert not resume_spy
+    scan = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 2_000,
+                                   state=st, path="scan")
+    assert_fleet_equal(res, scan)
+    with pytest.raises(ValueError, match="scan-shaped"):
+        simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched, 2_000,
+                                state=st, path="interleaved")
+
+
+def test_cold_bitstream_resume_stays_on_scan(resume_spy):
+    """An undersized bitstream cache keeps resumed preempted runs on the
+    scan — the resumable engine needs warmth just like the one-shot one."""
+    cfg = simulator.ReconfigConfig(num_slots=4, miss_latency=50,
+                                   bs_cache_entries=4)
+    tr = _fleet(2)
+    sched = simulator.SchedulerConfig(quantum_cycles=2_000)
+    _, st = simulator.simulate_many(tr, cfg, isa.SCENARIO_2, sched, 1_500,
+                                    return_state=True)
+    res = simulator.simulate_many(tr, cfg, isa.SCENARIO_2, sched, 1_500,
+                                  state=st)
+    assert not resume_spy
+    scan = simulator.simulate_many(tr, cfg, isa.SCENARIO_2, sched, 1_500,
+                                   state=st, path="scan")
+    assert_fleet_equal(res, scan)
+    with pytest.raises(ValueError, match="warm bitstream"):
+        simulator.simulate_many(tr, cfg, isa.SCENARIO_2, sched, 1_500,
+                                state=st, path="interleaved")
+
+
+def test_online_epoch_advance_and_probes_ride_fast_path(resume_spy):
+    """The online layer's epoch advances and migration-penalty probes are
+    the resumed runs the tentpole targets — every one of them must now
+    dispatch to the resumable engine, with the report unchanged."""
+    from repro.sched import (ContentionModel, OnlineConfig, OnlineReplacer,
+                             PlacementConfig, TenantEvent)
+    pcfg = PlacementConfig(num_slots=4, miss_latency=50,
+                           quantum_cycles=2_000, trace_len=2_000,
+                           steps_per_program=2_000)
+    ocfg = OnlineConfig(num_cores=2, epoch_steps=2_000, probe_steps=800,
+                        placement=pcfg)
+    rep = OnlineReplacer(ocfg, model=ContentionModel(pcfg), policy="never")
+    rep.run([TenantEvent(0, "arrive", "a", "minver"),
+             TenantEvent(0, "arrive", "b", "crc32")], 2)
+    advances = len(resume_spy)
+    assert advances > 0                   # every epoch advance was seeded
+    assert rep.migration_penalty("a") > 0.0
+    assert len(resume_spy) == advances + 2   # warm + cold probe, both fast
+
+
+# ---------------------------------------------------------------------------
+# stacked cold-bitstream pass: sweep_bitstream / single entries == scan
+# ---------------------------------------------------------------------------
+
+def test_sweep_bitstream_matches_scan_grid():
+    """Full {slot count x latency x capacity x penalty} grid, stacked pass
+    vs one scan per cell — every counter bit-for-bit."""
+    tr = np.stack([traces.build_trace("minver", 1_000),
+                   traces.build_trace("nettle-aes", 1_000)])
+    kw = dict(slot_counts=[2, 4], miss_latencies=[10, 50],
+              bs_entries=[1, 4, 16], bs_miss_extras=[50, 250],
+              total_steps=2_000)
+    fast = simulator.sweep_bitstream(tr, isa.SCENARIO_2, **kw)
+    forced = simulator.sweep_bitstream(tr, isa.SCENARIO_2,
+                                       path="stackdist_cold", **kw)
+    scan = simulator.sweep_bitstream(tr, isa.SCENARIO_2, path="scan", **kw)
+    assert_fleet_equal(fast, scan)        # ColdGrid is a NamedTuple too
+    assert_fleet_equal(forced, scan)
+    with pytest.raises(ValueError, match="unknown path"):
+        simulator.sweep_bitstream(tr, isa.SCENARIO_2, path="interleaved",
+                                  **kw)
+
+
+def test_bitstream_study_rows_pinned_to_scan():
+    """The benchmark's exact output rows (miss rates and IMF speedups, as
+    formatted) must not move between the stacked pass and the per-cell
+    scans it replaced — at a reduced trace length to keep CI fast."""
+    from benchmarks import bitstream_study
+    fast = bitstream_study.run(trace_len=2_000)
+    scan = bitstream_study.run(trace_len=2_000, path="scan")
+    assert fast == scan
+
+
+def test_single_entries_cold_parity_and_forcing():
+    cfg = simulator.ReconfigConfig(num_slots=4, miss_latency=50,
+                                   bs_cache_entries=4)
+    tr = traces.build_trace("nettle-aes", 3_000)
+    fast = simulator.simulate_single(tr, cfg, isa.SCENARIO_2)
+    scan = simulator.simulate_single(tr, cfg, isa.SCENARIO_2, path="scan")
+    forced = simulator.simulate_single(tr, cfg, isa.SCENARIO_2,
+                                       path="stackdist_cold")
+    assert_fleet_equal(fast, scan)
+    assert_fleet_equal(forced, scan)
+    # the warm engine must still refuse a cold cache
+    with pytest.raises(ValueError, match="stack-distance"):
+        simulator.simulate_single(tr, cfg, isa.SCENARIO_2, path="stackdist")
+    # batch lanes: (trace, latency) pairs through the stacked pass
+    trs = np.stack([tr, traces.build_trace("ud", 3_000)])
+    b_fast = simulator.simulate_single_batch(trs, [10, 50], cfg,
+                                             isa.SCENARIO_2)
+    b_scan = simulator.simulate_single_batch(trs, [10, 50], cfg,
+                                             isa.SCENARIO_2, path="scan")
+    assert_fleet_equal(b_fast, b_scan)
+
+
+def test_stackdist_cold_eligibility_rules():
+    ok = dict(quantum_cycles=simulator.NO_PREEMPT_QUANTUM,
+              max_miss_latency=50, bs_miss_extra=100, total_steps=10_000)
+    assert simulator.stackdist_cold_eligible(**ok)
+    # preempted runs stay the scan's: the miss subsequence is
+    # switch-point-dependent per grid cell
+    assert not simulator.stackdist_cold_eligible(
+        **{**ok, "quantum_cycles": 2_000})
+    # overflow guard, same int32 accumulators as the scan
+    assert not simulator.stackdist_cold_eligible(
+        **{**ok, "max_miss_latency": 1 << 29})
+    # forcing it on a preempted fleet raises
+    with pytest.raises(ValueError, match="cold-bitstream"):
+        simulator.sweep_fleet(
+            _fleet(2)[None], [50], isa.SCENARIO_2,
+            simulator.SchedulerConfig(quantum_cycles=2_000),
+            slot_counts=[4], bs_cache_entries=4, total_steps=2_000,
+            path="stackdist_cold")

@@ -161,9 +161,11 @@ def test_chunked_batch_axis_matches_unchunked(monkeypatch):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
-def test_cold_bitstream_cache_falls_back_to_scan():
-    """An undersized bitstream cache (bitstream_study's axis) is ineligible;
-    auto must still serve the historical scan numbers."""
+def test_cold_bitstream_cache_serves_scan_numbers():
+    """An undersized bitstream cache (bitstream_study's axis) is ineligible
+    for the warm-mode engine; auto now routes it through the stacked
+    cold-bitstream pass (`repro.core.stackdist_cold`), which must still
+    serve the historical scan numbers bit-for-bit."""
     tr = traces.build_trace("nbody", 8_000)[None, None, :]
     auto = simulator.sweep_fleet(tr, [50], isa.SCENARIO_2, NO_PREEMPT,
                                  slot_counts=[4], bs_cache_entries=4,

@@ -185,10 +185,11 @@ def test_tiny_quanta_stay_on_scan_under_auto(route_spy):
     _assert_fleet_equal(auto, forced)
 
 
-def test_simulate_many_dispatch_and_resume_fallback(route_spy):
-    """One-shot result-only simulate_many rides the engine; resumed and
-    state-returning calls must keep the scan (the fast path never
-    materialises a FleetState)."""
+def test_simulate_many_dispatch_one_shot_and_resume(route_spy, resume_spy):
+    """One-shot result-only simulate_many rides the windowed engine;
+    state-returning and resumed calls ride the *resumable* entry (and
+    agree with scan bit-for-bit — the deep parity lives in
+    test_resume_fastpath.py, this pins the routing)."""
     tr = _preempted_fleet()[0]
     sched = simulator.SchedulerConfig(quantum_cycles=2_000)
     auto = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
@@ -199,21 +200,25 @@ def test_simulate_many_dispatch_and_resume_fallback(route_spy):
     assert len(route_spy) == 1
     _assert_fleet_equal(auto, scan)
 
-    # return_state / resume: scan only, engine untouched
+    # return_state / resume: the resumable engine, not the scan
+    assert not resume_spy
     res, st = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
                                       total_steps=5_000, return_state=True)
+    assert len(resume_spy) == 1
     _assert_fleet_equal(auto, res)
     simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
                             total_steps=1_000, state=st)
-    assert len(route_spy) == 1
-    with pytest.raises(ValueError, match="one-shot"):
-        simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
-                                total_steps=1_000, state=st,
-                                path="interleaved")
-    with pytest.raises(ValueError, match="one-shot"):
-        simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
-                                total_steps=1_000, return_state=True,
-                                path="interleaved")
+    assert len(resume_spy) == 2
+    # forcing the engine on a resumable call is allowed and exact
+    forced = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
+                                     total_steps=1_000, state=st,
+                                     path="interleaved")
+    assert len(resume_spy) == 3
+    scan_res = simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
+                                       total_steps=1_000, state=st,
+                                       path="scan")
+    _assert_fleet_equal(forced, scan_res)
+    assert len(route_spy) == 1          # windowed one-shot entry untouched
     with pytest.raises(ValueError, match="unknown path"):
         simulator.simulate_many(tr, CFG, isa.SCENARIO_2, sched,
                                 total_steps=1_000, path="stackdist")
