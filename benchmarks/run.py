@@ -124,6 +124,14 @@ def bench_online_churn():
     return lines, head[2:]
 
 
+def bench_chaos_serve():
+    """Online serving under a fault storm: recovery-policy comparison."""
+    from benchmarks import chaos_serve
+    lines, _ = chaos_serve.run()
+    head = [l for l in lines if l.startswith("# finding")][0]
+    return lines, head[2:]
+
+
 BENCHES = {
     "fig4_extensions": bench_fig4,
     "fig5_classification": bench_fig5,
@@ -138,6 +146,7 @@ BENCHES = {
     "placement_study": bench_placement_study,
     "placement_search": bench_placement_search,
     "online_churn": bench_online_churn,
+    "chaos_serve": bench_chaos_serve,
 }
 
 
@@ -156,7 +165,7 @@ def _record_fleet_json(results: dict) -> None:
         json.dump(existing, f, indent=2)
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substrings; a module runs when "
@@ -165,13 +174,20 @@ def main() -> None:
                     help="print the registered module names (the values "
                          "--only matches against) and exit")
     ap.add_argument("--out", default="experiments/bench")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.list:
         for name in BENCHES:
             print(name)
         return
-    os.makedirs(args.out, exist_ok=True)
     only = [s for s in (args.only or "").split(",") if s]
+    # a substring matching nothing is a typo, not an empty run: silently
+    # running zero modules and exiting 0 once masked a dead perf gate
+    dead = [s for s in only if not any(s in name for name in BENCHES)]
+    if dead:
+        ap.error(
+            f"--only substring(s) {dead} match no registered module; "
+            f"valid names: {', '.join(BENCHES)}")
+    os.makedirs(args.out, exist_ok=True)
     results: dict = {}
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():

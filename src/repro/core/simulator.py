@@ -694,37 +694,114 @@ def fleet_tag_table(scenarios, num_programs: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _canonical_state(state: FleetState) -> FleetState:
-    """Behaviour-preserving canonical cache arrangement: residents sorted
-    by LRU clock (`last_use`) ascending into a prefix, empty entries
-    (tag -1, last_use 0) as the suffix, clocks untouched.
+def canonical_slot_state(st: slots.SlotState) -> slots.SlotState:
+    """Behaviour-preserving canonical arrangement of one cache: residents
+    sorted by LRU clock (`last_use`) ascending into a prefix, empty
+    entries (tag -1, last_use 0) as the suffix, clock untouched.
 
     Exact-LRU behaviour depends only on the resident (tag, last_use) set —
     hits are membership tests, the victim is argmin(last_use) with empties
     preferred, fills take the first empty — never on physical entry order
-    (`slots._access`).  Canonicalising every returned `FleetState` makes
-    states comparable across engines: the interleaved engine recovers the
-    resident *sets* and clocks exactly but not the scan's incidental fill
-    order, so both report this shared normal form.  Ties in `last_use`
-    (impossible in real scan states, whose filled clocks are distinct)
-    keep their original relative order (stable sort), preserving the
-    scan's lowest-index-victim tiebreak.
+    (`slots._access`).  Ties in `last_use` (impossible in real scan
+    states, whose filled clocks are distinct) keep their original relative
+    order (stable sort), preserving the scan's lowest-index-victim
+    tiebreak.  Fault surgery (`seu_fleet_state`, `degrade_fleet_state`)
+    re-canonicalises after punching holes so a mutated cache is
+    prefix-packed again.
     """
-    def canon(st: slots.SlotState) -> slots.SlotState:
-        tags = np.asarray(st.tags)
-        lu = np.asarray(st.last_use)
-        filled = tags >= 0
-        k = int(filled.sum())
-        order = np.argsort(lu[filled], kind="stable")
-        t = np.full(tags.shape, -1, np.int32)
-        u = np.zeros(lu.shape, np.int32)
-        t[:k] = tags[filled][order]
-        u[:k] = lu[filled][order]
-        return slots.SlotState(tags=jnp.asarray(t), last_use=jnp.asarray(u),
-                               clock=st.clock)
+    tags = np.asarray(st.tags)
+    lu = np.asarray(st.last_use)
+    filled = tags >= 0
+    k = int(filled.sum())
+    order = np.argsort(lu[filled], kind="stable")
+    t = np.full(tags.shape, -1, np.int32)
+    u = np.zeros(lu.shape, np.int32)
+    t[:k] = tags[filled][order]
+    u[:k] = lu[filled][order]
+    return slots.SlotState(tags=jnp.asarray(t), last_use=jnp.asarray(u),
+                           clock=st.clock)
 
-    return state._replace(slot_st=canon(state.slot_st),
-                          bs_st=canon(state.bs_st))
+
+def _canonical_state(state: FleetState) -> FleetState:
+    """Behaviour-preserving canonical cache arrangement of a whole
+    `FleetState` (see `canonical_slot_state`).  Canonicalising every
+    returned `FleetState` makes states comparable across engines: the
+    interleaved engine recovers the resident *sets* and clocks exactly
+    but not the scan's incidental fill order, so both report this shared
+    normal form.
+    """
+    return state._replace(slot_st=canonical_slot_state(state.slot_st),
+                          bs_st=canonical_slot_state(state.bs_st))
+
+
+# ---------------------------------------------------------------------------
+# fault surgery: the state mutations a fleet's fault events inflict
+# ---------------------------------------------------------------------------
+
+
+def seu_fleet_state(state: FleetState, slot_indices) -> FleetState:
+    """A single-event upset corrupts the disambiguator entries at
+    `slot_indices`: their residents are invalidated (the configuration
+    bits are garbage, so the implementation must be re-loaded on next
+    use) and the cache is re-canonicalised so survivors pack a prefix.
+
+    The result is usually NOT seedable by the interleaved resume — a
+    partially-filled disambiguator next to a fuller bitstream cache is a
+    geometry no uninterrupted LRU run reaches (`_seedable_fleet_state`)
+    — so the next resumed segment falls back to the cycle-by-cycle scan;
+    once that segment refills the disambiguator, subsequent segments ride
+    the engine again.
+    """
+    idx = np.asarray(slot_indices, np.int64).reshape(-1)
+    n = np.asarray(state.slot_st.tags).shape[0]
+    if idx.size and (idx.min() < 0 or idx.max() >= n):
+        raise ValueError(
+            f"SEU slot indices {idx.tolist()} out of range for a "
+            f"{n}-slot disambiguator")
+    return state._replace(slot_st=canonical_slot_state(
+        slots.invalidate(state.slot_st, idx)))
+
+
+def flush_bitstream(state: FleetState) -> FleetState:
+    """A failed partial reconfiguration (or scrub) colds the bitstream
+    cache; the configured slots keep running, but every future
+    disambiguator miss re-pays the full bitstream re-load penalty
+    (`bs_miss_extra` — the LUTstructions cost made real).
+
+    Slot residents no longer covered by the bitstream cache make the
+    state unseedable by the interleaved resume, so the next resumed
+    segment rides the scan until the bitstream cache re-warms.
+    """
+    bs_entries = np.asarray(state.bs_st.tags).shape[0]
+    return state._replace(bs_st=slots.init(bs_entries))
+
+
+def degrade_fleet_state(state: FleetState, num_active: int) -> FleetState:
+    """Shrink a fleet state to a core that came back with only
+    `num_active` usable disambiguator slots: the `num_active`
+    most-recently-used residents survive (packed canonically into the
+    active prefix), everything else is invalidated.
+
+    The result is the state contract of `simulate_many(...,
+    num_active=k)`: masking (`slots.lookup`'s `num_active`) makes
+    inactive slots inert — never matched, never victims — so a masked
+    run over a state whose residents all sit inside the active prefix is
+    bit-for-bit an LRU cache of the smaller size (the degraded-core
+    equivalence property, pinned by tests/test_faults.py).
+    """
+    n = np.asarray(state.slot_st.tags).shape[0]
+    if not 1 <= num_active <= n:
+        raise ValueError(
+            f"num_active must be in [1, {n}], got {num_active}")
+    st = canonical_slot_state(state.slot_st)
+    tags = np.asarray(st.tags)
+    filled = int((tags >= 0).sum())
+    if filled > num_active:
+        # canonical order is LRU-ascending: the dead slots take the
+        # least-recently-used residents (prefix entries)
+        st = canonical_slot_state(
+            slots.invalidate(st, np.arange(filled - num_active)))
+    return state._replace(slot_st=st)
 
 
 def _seedable_fleet_state(state: FleetState, num_tags: int,
@@ -1009,6 +1086,7 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                   scan_unroll: int = SCAN_UNROLL, *,
                   state: FleetState | None = None,
                   return_state: bool = False,
+                  num_active: int | None = None,
                   path: str = "auto"):
     """Round-robin fleet of P programs sharing one reconfigurable core.
 
@@ -1037,6 +1115,16 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
     resumes and state comparisons never see which engine ran).
     `path="scan"|"interleaved"` forces an engine ("interleaved" raises
     on ineligible or unseedable runs).
+
+    `num_active` masks the disambiguator down to its first `num_active`
+    slots (a degraded core that came back with fewer usable slots —
+    `slots.lookup`'s masking, bit-for-bit an LRU cache of that size).
+    Masked runs ride the scan: the interleaved engine seeds full-geometry
+    caches only, so `path="interleaved"` raises.  A resumed masked run
+    requires every resident inside the active prefix
+    (`degrade_fleet_state` produces exactly that), otherwise the inert
+    masked residents would be re-sorted into live slots on
+    canonicalisation.
     """
     traces = jnp.asarray(traces, jnp.int32)
     if traces.ndim != 2:
@@ -1052,9 +1140,26 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
             f"'auto'|'scan'|'interleaved' (solo unpreempted runs take the "
             f"stack-distance engine through simulate_single/sweep_fleet)")
     quanta = sched.quanta(num_progs)
+    active = cfg.num_slots if num_active is None else int(num_active)
+    if not 1 <= active <= cfg.num_slots:
+        raise ValueError(
+            f"num_active must be in [1, {cfg.num_slots}] "
+            f"(the allocated slot count), got {num_active}")
+    masked = active < cfg.num_slots
+    if masked and path == "interleaved":
+        raise ValueError(
+            "a masked (degraded) disambiguator rides the scan — the "
+            "interleaved engine seeds full-geometry caches only; use "
+            "path='auto' or 'scan'")
     if state is not None:
         _check_fleet_state(state, num_progs, cfg.num_slots,
                            cfg.bs_cache_entries)
+        if masked and bool(np.any(
+                np.asarray(state.slot_st.tags)[active:] >= 0)):
+            raise ValueError(
+                f"num_active={active} masks slots the state still "
+                f"populates — apply simulator.degrade_fleet_state first "
+                f"so the dead slots hold no residents")
         if int(state.sched_idx) >= schedule.shape[0]:
             raise ValueError(
                 f"FleetState scheduler cursor {int(state.sched_idx)} is "
@@ -1074,7 +1179,8 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                 "fleet's merged tag set and non-negative int32-safe costs "
                 "(see simulator.interleaved_eligible)")
         if path == "interleaved" or (
-                path == "auto" and eligible and _interleaved_auto_ok(
+                path == "auto" and not masked and eligible
+                and _interleaved_auto_ok(
                     quanta[None, :], 1, int(np.max(table)) + 1, total_steps,
                     None)):
             res = _sweep_fleet_interleaved(
@@ -1093,7 +1199,8 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
         worst_step = (int(np.max(isa.INSTR_HW_CYCLES))
                       + int(cfg.miss_latency) + int(cfg.bs_miss_extra)
                       + int(sched.handler_cycles))
-        resumable = (eligible and cfg.bs_cache_entries >= num_tags
+        resumable = (not masked and eligible
+                     and cfg.bs_cache_entries >= num_tags
                      and _seedable_fleet_state(seed_state, num_tags,
                                                worst_step, total_steps))
         if path == "interleaved" and not resumable:
@@ -1116,7 +1223,7 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                                           total_steps)
     res, final = _simulate_fleet(
         traces, table, jnp.int32(cfg.miss_latency),
-        jnp.int32(cfg.num_slots),
+        jnp.int32(active),
         jnp.asarray(quanta),
         jnp.asarray(schedule),
         jnp.int32(sched.handler_cycles), cfg.num_slots,

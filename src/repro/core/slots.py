@@ -167,6 +167,23 @@ def lookup_batch(state: SlotState, tags: jnp.ndarray,
     return jax.lax.scan(step, state, tags)
 
 
+def invalidate(state: SlotState, idx) -> SlotState:
+    """SEU surgery: kill the residents at entry indices `idx`.
+
+    The hit entries become empty (tag -1, last_use 0) exactly as if they
+    had never been filled; the clock and every surviving resident are
+    untouched, so the survivors keep their relative LRU order.  This is
+    the fault-injection primitive behind `simulator.seu_fleet_state` —
+    a single-event upset corrupts a slot's configuration bits, so its
+    implementation must be re-loaded (and re-pays the reconfiguration
+    latency) on next use.
+    """
+    idx = jnp.asarray(idx, jnp.int32).reshape(-1)
+    return SlotState(tags=state.tags.at[idx].set(EMPTY),
+                     last_use=state.last_use.at[idx].set(0),
+                     clock=state.clock)
+
+
 def occupancy(state: SlotState) -> jnp.ndarray:
     return jnp.sum(state.tags != EMPTY)
 

@@ -65,6 +65,11 @@ class StragglerMonitor:
     def observe(self, step: int, step_time: float) -> bool:
         history = self.times[-self.window:]
         self.times.append(step_time)
+        # keep only the sliding window: `history` never looks further
+        # back, so trimming is behaviour-free — without it a long run
+        # accretes one float per step forever
+        if len(self.times) > self.window:
+            del self.times[:len(self.times) - self.window]
         if len(history) < 8:
             return False
         med = statistics.median(history)
@@ -91,7 +96,8 @@ def run_supervised(*, init_fn, step_fn, save_fn, restore_fn, num_steps: int,
                    ckpt_every: int, policy: RestartPolicy | None = None,
                    heartbeat: Heartbeat | None = None,
                    straggler: StragglerMonitor | None = None,
-                   fail_hook: Callable | None = None) -> dict:
+                   fail_hook: Callable | None = None,
+                   retryable: tuple = (TrainingFailure,)) -> dict:
     """Supervision loop.
 
     init_fn()                -> (state, start_step)   (restores if possible)
@@ -100,8 +106,20 @@ def run_supervised(*, init_fn, step_fn, save_fn, restore_fn, num_steps: int,
     restore_fn()             -> (state, start_step)
     fail_hook(step)          -> None | raises  (test fault injection)
 
+    `retryable` is the exception tuple the restart policy absorbs —
+    anything else propagates immediately.  Defaults to `TrainingFailure`;
+    widen it (e.g. ``(TrainingFailure, OSError)``) when the step function
+    can fail in recoverable infrastructure-specific ways.
+
     Returns a report {steps_run, restarts, straggler_events, final_step}.
     """
+    retryable = tuple(retryable)
+    if not retryable or not all(
+            isinstance(e, type) and issubclass(e, BaseException)
+            for e in retryable):
+        raise TypeError(
+            f"retryable must be a non-empty tuple of exception types, "
+            f"got {retryable!r}")
     policy = policy or RestartPolicy()
     restarts = 0
     state, step = init_fn()
@@ -121,7 +139,7 @@ def run_supervised(*, init_fn, step_fn, save_fn, restore_fn, num_steps: int,
                 straggler.observe(step, dt)
             if step % ckpt_every == 0 or step == num_steps:
                 save_fn(state, step)
-        except TrainingFailure:
+        except retryable:
             restarts += 1
             if restarts > policy.max_restarts:
                 raise

@@ -28,9 +28,16 @@ programs should share a core in the first place:
                   epoch and pricing each move as predicted contention
                   delta minus a *measured* warm-state migration penalty
                   (resume-on-cold-core probe);
-                  `SlotServeEngine.serve_online` is the serving entry.
+                  `SlotServeEngine.serve_online` is the serving entry;
+  * `faults`    — deterministic fault injection for the online loop: a
+                  seeded `FaultPlan` schedules epoch-aligned core losses,
+                  slot SEUs, bitstream flushes and reconfig stalls, which
+                  the `OnlineReplacer` detects and recovers from
+                  (warm-state-aware evacuation vs cold-restart vs none).
 """
 from repro.sched.admission import AdmissionController, AdmissionDecision
+from repro.sched.faults import (FAULT_KINDS, RECOVERY_POLICIES, FaultEvent,
+                                FaultPlan)
 from repro.sched.online import (OnlineConfig, OnlineReplacer, OnlineReport,
                                 TenantEvent)
 from repro.sched.placement import (ContentionModel, Placement,
@@ -45,5 +52,6 @@ __all__ = [
     "fifo_placement", "place_tenants", "random_placement",
     "score_placement",
     "OnlineConfig", "OnlineReplacer", "OnlineReport", "TenantEvent",
+    "FAULT_KINDS", "RECOVERY_POLICIES", "FaultEvent", "FaultPlan",
     "PriorityPolicy", "quantum_grid",
 ]

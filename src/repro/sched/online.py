@@ -44,16 +44,33 @@ resume explicit `FleetState`s and ride the engine's *resumable* entry
 (`simulate_many(..., state=S, return_state=True)` seeds the engine from S
 and materialises S' back out, bit-for-bit equal to the scan).  The
 cycle-by-cycle scan only returns for caches no scan could have produced
-or cold bitstream caches — neither occurs in this loop.
+or cold bitstream caches — in a fault-free serve, neither occurs.
+
+Fault tolerance (`repro.sched.faults`): a seeded `FaultPlan` injects
+epoch-aligned core losses, slot SEUs, bitstream flushes and reconfig
+stalls.  The replacer detects each fault at its epoch, evacuates tenants
+off lost cores as *mandatory* moves (priced for destination choice only,
+never gated on net benefit; destinations under a reconfig stall are
+retried with capped exponential backoff), prices degraded cores at their
+reduced slot width through `ContentionModel.predict(num_slots=...)`, and
+emits a structured fault log into the extended `OnlineReport`.  Cache
+damage (SEU/flush) routes the next resumed segment through the scan
+(the mutated state is not interleaved-seedable) until the caches
+re-warm; degraded cores ride the scan with `num_active` masking until
+repaired at full width.  `snapshot()`/`restore()` capture the complete
+host-side serving state so a crashed serve restarts mid-trace
+bit-for-bit (`run(checkpoint_every=..., save_fn=...)`).
 """
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import simulator, slots
+from repro.sched.faults import RECOVERY_POLICIES, FaultPlan
 from repro.sched.placement import (ContentionModel, PlacementConfig,
                                    place_tenants)
 
@@ -129,25 +146,44 @@ class _TenantRun:
     def __init__(self, name: str, bench: str, core: int):
         self.name = name
         self.bench = bench
-        self.core = core
+        self.core = core               # -1: stranded (no core assigned)
         self.cursor = 0
         self.cycles = 0
         self.instrs = 0
         self.slot_misses = 0
         self.migrations = 0
+        self.evacuations = 0
+        # cycles of service denied while stranded on a down core: each
+        # stranded epoch charges the work the tenant should have completed
+        # (epoch_steps x solo CPI) as pure delay with nothing retired
+        self.stall_cycles = 0.0
 
 
 class _Core:
-    """A physical reconfigurable core: persistent slot/bitstream caches."""
+    """A physical reconfigurable core: persistent slot/bitstream caches,
+    plus its fault status (up/down, usable slot width, reconfig-port
+    stall horizon)."""
 
     def __init__(self, cfg: OnlineConfig):
         self.slot_st = slots.init(cfg.placement.num_slots)
         self.bs_st = slots.init(cfg.bs_cache_entries)
+        self.up = True
+        self.active_slots = cfg.placement.num_slots
+        self.repair_at: int | None = None    # epoch a transient loss heals
+        self.repair_degraded = 0             # slots lost after the repair
+        self.stall_until = 0                 # reloads to here fail before it
 
 
 @dataclass
 class OnlineReport:
-    """Outcome of one `OnlineReplacer.run`."""
+    """Outcome of one `OnlineReplacer.run`.
+
+    `worst_slowdown` is the classic CPI-based contention metric (cycles
+    actually spent / solo reference — blind to stranding, since a stalled
+    tenant accrues no cycles); `worst_lifetime_slowdown` additionally
+    charges every stranded epoch's denied service as delay, so a tenant
+    parked on a dead core shows the outage it actually suffered.  In a
+    fault-free serve the two coincide per tenant."""
 
     policy: str
     epochs: int
@@ -158,6 +194,10 @@ class OnlineReport:
     final_cores: tuple[tuple[str, ...], ...]
     moves: list                        # per-move log dicts
     epoch_log: list                    # per-epoch roster/migration rows
+    recovery: str = "warm"
+    evacuations: int = 0
+    worst_lifetime_slowdown: float = 0.0
+    fault_log: list = field(default_factory=list)
 
 
 class OnlineReplacer:
@@ -169,14 +209,35 @@ class OnlineReplacer:
       * "warm"   — apply a move only when its predicted contention saving
         over the next epoch exceeds its *measured* warm-state migration
         penalty (resume-on-cold-core probe).
+
+    `faults` (a `repro.sched.faults.FaultPlan`) injects epoch-aligned
+    fault events; `recovery` picks how the replacer reacts
+    (`RECOVERY_POLICIES`): "warm" evacuates stranded tenants onto the
+    best surviving core (a mandatory move priced for destination choice
+    only), "cold_restart" additionally flushes every surviving core's
+    caches on a fault epoch (the restart-everything baseline), "none"
+    leaves stranded tenants stalled until their core repairs.
     """
 
     def __init__(self, cfg: OnlineConfig | None = None,
                  model: ContentionModel | None = None,
-                 policy: str = "warm"):
+                 policy: str = "warm", *,
+                 faults: FaultPlan | None = None,
+                 recovery: str = "warm",
+                 backoff_cap: int = 8):
         if policy not in POLICIES:
             raise ValueError(
                 f"unknown policy {policy!r}, expected one of {POLICIES}")
+        if recovery not in RECOVERY_POLICIES:
+            raise ValueError(
+                f"unknown recovery policy {recovery!r}, expected one of "
+                f"{RECOVERY_POLICIES}")
+        if faults is not None and not isinstance(faults, FaultPlan):
+            raise TypeError(
+                f"faults must be a repro.sched.faults.FaultPlan, got "
+                f"{type(faults).__name__}")
+        if backoff_cap < 1:
+            raise ValueError(f"backoff_cap must be >= 1, got {backoff_cap}")
         self.cfg = cfg or OnlineConfig()
         self.model = model or ContentionModel(self.cfg.placement)
         if self.model.cfg.num_slots != self.cfg.placement.num_slots:
@@ -186,11 +247,21 @@ class OnlineReplacer:
                 f"{self.cfg.placement.num_slots} — predictions would price "
                 f"a different machine")
         self.policy = policy
+        self.faults = faults
+        self.recovery = recovery
+        self.backoff_cap = backoff_cap
         self.tenants: dict[str, _TenantRun] = {}
         self.departed: list[_TenantRun] = []
         self.cores = [_Core(self.cfg) for _ in range(self.cfg.num_cores)]
         self.migrations = 0
+        self.evacuations = 0
         self.moves: list[dict] = []
+        self.fault_log: list[dict] = []
+        self.epoch_log: list[dict] = []
+        # per-tenant reconfig-retry ledger: attempts blocked by a stalled
+        # destination back off exponentially (capped) before retrying
+        self._retry: dict[str, dict] = {}
+        self._epoch = 0                      # next epoch run() executes
 
     # ------------------------------------------------------------------
     # roster bookkeeping
@@ -203,6 +274,22 @@ class OnlineReplacer:
         return [tuple(sorted(t.bench for t in self._members(c)))
                 for c in range(self.cfg.num_cores)]
 
+    def _up_cores(self) -> list[int]:
+        return [ci for ci in range(self.cfg.num_cores) if self.cores[ci].up]
+
+    def _predict_on(self, pairs) -> list:
+        """Predict each (core, group) pair's slowdowns at that core's
+        usable slot width.  Full-width cores batch through one `predict`
+        call (the fault-free fast path, bit-identical to the pre-fault
+        code); degraded cores price at their reduced width, which is what
+        down-weights them as destinations."""
+        if all(self.cores[c].active_slots == self.cfg.placement.num_slots
+               for c, _ in pairs):
+            return self.model.predict([g for _, g in pairs])
+        return [self.model.predict(
+                    [g], num_slots=self.cores[c].active_slots)[0]
+                for c, g in pairs]
+
     def _arrive(self, name: str, bench: str) -> None:
         if name in self.tenants:
             raise ValueError(f"tenant {name!r} arrived twice")
@@ -212,14 +299,18 @@ class OnlineReplacer:
                 f"service records are keyed by name, so a returning "
                 f"tenant needs a fresh name (e.g. {name!r}-2)")
         self.model.trace(bench)            # validates the bench name
-        counts = [len(self._members(c)) for c in range(self.cfg.num_cores)]
-        open_cores = [c for c in range(self.cfg.num_cores)
-                      if counts[c] == min(counts)]
-        # among least-loaded cores, join the one whose resulting group
+        up = self._up_cores()
+        if not up:
+            # fully-dark fleet: the tenant strands until a core repairs
+            self.tenants[name] = _TenantRun(name, bench, -1)
+            return
+        counts = [len(self._members(c)) for c in up]
+        open_cores = [c for c, n in zip(up, counts) if n == min(counts)]
+        # among least-loaded up cores, join the one whose resulting group
         # predicts the best (worst, mean) slowdown — greedy, no migration
         cand = [tuple(sorted([t.bench for t in self._members(c)] + [bench]))
                 for c in open_cores]
-        preds = self.model.predict(cand)
+        preds = self._predict_on(list(zip(open_cores, cand)))
         best = min(range(len(open_cores)),
                    key=lambda i: (float(np.max(preds[i])),
                                   float(np.mean(preds[i])), i))
@@ -234,6 +325,147 @@ class OnlineReplacer:
         self.departed.append(self.tenants.pop(name))
 
     # ------------------------------------------------------------------
+    # fault injection, detection and recovery
+    # ------------------------------------------------------------------
+    def _apply_faults(self, epoch: int) -> bool:
+        """Heal due repairs, then inject this epoch's scheduled faults.
+        Returns True when any fault fired (cold_restart keys off it)."""
+        for ci, core in enumerate(self.cores):
+            if core.up or core.repair_at is None or epoch < core.repair_at:
+                continue
+            # the repaired region is rebuilt: caches come back cold, and
+            # possibly narrower (masked via num_active in every later sim)
+            core.up = True
+            core.repair_at = None
+            core.active_slots = max(
+                1, self.cfg.placement.num_slots - core.repair_degraded)
+            core.repair_degraded = 0
+            core.slot_st = slots.init(self.cfg.placement.num_slots)
+            core.bs_st = slots.init(self.cfg.bs_cache_entries)
+            self.fault_log.append({"epoch": epoch, "kind": "repair",
+                                   "core": ci,
+                                   "active_slots": core.active_slots})
+        if self.faults is None:
+            return False
+        any_fault = False
+        for ev in self.faults.at(epoch):
+            core = self.cores[ev.core]
+            if not core.up:
+                continue        # a down core absorbs no further faults
+            rec = {"epoch": epoch, "detected": epoch, "kind": ev.kind,
+                   "core": ev.core}
+            if ev.kind == "core_loss":
+                core.up = False
+                core.repair_at = (None if ev.permanent
+                                  else epoch + ev.repair_epochs)
+                core.repair_degraded = ev.degraded_slots
+                rec["permanent"] = ev.permanent
+                rec["repair_at"] = core.repair_at
+                rec["stranded"] = tuple(t.name
+                                        for t in self._members(ev.core))
+            elif ev.kind == "slot_seu":
+                tags = np.asarray(core.slot_st.tags)
+                occupied = np.nonzero(tags >= 0)[0]
+                hit = np.sort(self.faults.rng(ev).choice(
+                    occupied, size=min(ev.num_hit, occupied.size),
+                    replace=False)) if occupied.size else occupied
+                rec["hit_entries"] = tuple(int(i) for i in hit)
+                rec["hit_tags"] = tuple(int(tags[i]) for i in hit)
+                if hit.size:
+                    core.slot_st = simulator.canonical_slot_state(
+                        slots.invalidate(core.slot_st, hit))
+            elif ev.kind == "bitstream_flush":
+                core.bs_st = slots.init(self.cfg.bs_cache_entries)
+            else:                                   # reconfig_stall
+                core.stall_until = max(core.stall_until,
+                                       epoch + ev.stall_epochs)
+                rec["stall_until"] = core.stall_until
+            self.fault_log.append(rec)
+            any_fault = True
+        return any_fault
+
+    def _attempt_move(self, name: str, dst: int, epoch: int, *,
+                      why: str) -> bool:
+        """Gate a reload/migration attempt on the destination's reconfig
+        port.  A stalled destination fails the attempt and schedules a
+        retry with capped exponential backoff; a pending backoff defers
+        silently until its epoch comes up."""
+        r = self._retry.get(name)
+        if r is not None and epoch < r["next"]:
+            return False
+        if epoch < self.cores[dst].stall_until:
+            retries = (r["retries"] if r is not None else 0) + 1
+            delay = min(1 << (retries - 1), self.backoff_cap)
+            self._retry[name] = {"retries": retries, "next": epoch + delay}
+            self.fault_log.append({
+                "epoch": epoch, "kind": "reconfig_retry", "tenant": name,
+                "dst": dst, "why": why, "retries": retries,
+                "next_attempt": epoch + delay})
+            return False
+        return True
+
+    def _cold_resume_cycles(self, t: _TenantRun, dst: int) -> float:
+        """Cycles of re-warming the evacuee pays on its destination,
+        measured by a solo probe resumed from the destination's actual
+        caches (usually cold for this tenant's tags) against the solo
+        reference — the fault log's 'what did this evacuation cost'."""
+        pcfg = self.cfg.placement
+        core = self.cores[dst]
+        st = simulator.init_fleet_state(
+            1, pcfg.num_slots, self.cfg.bs_cache_entries)._replace(
+                slot_st=core.slot_st, bs_st=core.bs_st,
+                cursors=jnp.asarray([t.cursor], jnp.int32))
+        na = (core.active_slots
+              if core.active_slots < pcfg.num_slots else None)
+        res = simulator.simulate_many(
+            np.asarray(self.model.trace(t.bench))[None, :],
+            self.cfg.reconfig(), self.model.scenario_of(t.bench),
+            simulator.SchedulerConfig.no_preempt(pcfg.handler_cycles),
+            total_steps=self.cfg.probe_steps, state=st, num_active=na)
+        return max(0.0, float(int(res.cycles[0]))
+                   - self.cfg.probe_steps * self.model.solo_cpi(t.bench))
+
+    def _recover(self, epoch: int) -> None:
+        """Evacuate stranded tenants (core lost, or never placed) onto the
+        best surviving core.  Evacuations are *mandatory* moves: the
+        contention model prices only the destination choice — there is no
+        net-benefit gate, because the alternative is not-running."""
+        if self.recovery == "none":
+            return
+        stranded = sorted(
+            (t for t in self.tenants.values()
+             if t.core < 0 or not self.cores[t.core].up),
+            key=lambda t: t.name)
+        up = self._up_cores()
+        if not stranded or not up:
+            return
+        # prefer destinations whose reconfig port is not stalled; if every
+        # up core is stalled, attempts go through backoff and retry later
+        avail = [c for c in up
+                 if epoch >= self.cores[c].stall_until] or up
+        for t in stranded:
+            cand = [tuple(sorted([m.bench for m in self._members(c)]
+                                 + [t.bench])) for c in avail]
+            preds = self._predict_on(list(zip(avail, cand)))
+            best = min(range(len(avail)),
+                       key=lambda i: (float(np.max(preds[i])),
+                                      float(np.mean(preds[i])), i))
+            dst = avail[best]
+            src = t.core
+            if not self._attempt_move(t.name, dst, epoch,
+                                      why="evacuation"):
+                continue
+            cold = self._cold_resume_cycles(t, dst)
+            retries = self._retry.pop(t.name, {"retries": 0})["retries"]
+            t.core = dst
+            t.evacuations += 1
+            self.evacuations += 1
+            self.fault_log.append({
+                "epoch": epoch, "kind": "evacuation", "tenant": t.name,
+                "src": src, "dst": dst, "retries": retries,
+                "cold_resume_cycles": cold})
+
+    # ------------------------------------------------------------------
     # epoch advance over resumable fleet state
     # ------------------------------------------------------------------
     def _advance_epoch(self) -> None:
@@ -241,10 +473,12 @@ class OnlineReplacer:
         sched = pcfg.scheduler()
         rcfg = self.cfg.reconfig()
         for ci in range(self.cfg.num_cores):
+            core = self.cores[ci]
+            if not core.up:
+                continue                   # stranded tenants accrue stall
             members = self._members(ci)
             if not members:
                 continue
-            core = self.cores[ci]
             tr = np.stack([np.asarray(self.model.trace(t.bench))
                            for t in members])
             st = simulator.init_fleet_state(
@@ -255,11 +489,13 @@ class OnlineReplacer:
             st = st._replace(
                 slot_st=core.slot_st, bs_st=core.bs_st,
                 cursors=jnp.asarray([t.cursor for t in members], jnp.int32))
+            na = (core.active_slots
+                  if core.active_slots < pcfg.num_slots else None)
             res, st = simulator.simulate_many(
                 tr, rcfg,
                 [self.model.scenario_of(t.bench) for t in members],
                 sched, total_steps=self.cfg.epoch_steps,
-                state=st, return_state=True)
+                state=st, return_state=True, num_active=na)
             core.slot_st, core.bs_st = st.slot_st, st.bs_st
             cursors = np.asarray(st.cursors)
             cycles = np.asarray(res.cycles)
@@ -291,14 +527,18 @@ class OnlineReplacer:
         cold = simulator.init_fleet_state(
             1, pcfg.num_slots, self.cfg.bs_cache_entries)._replace(
                 cursors=jnp.asarray([t.cursor], jnp.int32))
-        warm = cold._replace(slot_st=self.cores[t.core].slot_st,
-                             bs_st=self.cores[t.core].bs_st)
+        core = self.cores[t.core]
+        warm = cold._replace(slot_st=core.slot_st, bs_st=core.bs_st)
         sched = simulator.SchedulerConfig.no_preempt(pcfg.handler_cycles)
         kw = dict(total_steps=self.cfg.probe_steps, return_state=False)
+        # the warm probe replays the tenant's current (possibly degraded)
+        # core; the cold probe is the full-width destination baseline
+        na = (core.active_slots
+              if core.active_slots < pcfg.num_slots else None)
         res_c = simulator.simulate_many(tr, rcfg, scen, sched,
                                         state=cold, **kw)
         res_w = simulator.simulate_many(tr, rcfg, scen, sched,
-                                        state=warm, **kw)
+                                        state=warm, num_active=na, **kw)
         return float(int(res_c.cycles[0]) - int(res_w.cycles[0]))
 
     def warm_fraction(self, name: str) -> float:
@@ -314,13 +554,20 @@ class OnlineReplacer:
                                   jnp.asarray(tags, jnp.int32))
         return float(np.mean(np.asarray(res)))
 
-    def _group_cycles(self, group: tuple[str, ...]) -> float:
+    def _group_cycles(self, group: tuple[str, ...],
+                      core: int | None = None) -> float:
         """Predicted cycles one epoch spends serving `group` on one core:
         per-member slowdown x solo CPI x the member's round-robin share of
-        the epoch's step budget."""
+        the epoch's step budget.  Pass `core` to price at that core's
+        usable slot width (degraded cores predict worse, so the re-solve
+        naturally steers load off them)."""
         if not group:
             return 0.0
-        pred = self.model.predict([group])[0]
+        ns = None
+        if (core is not None and self.cores[core].active_slots
+                < self.cfg.placement.num_slots):
+            ns = self.cores[core].active_slots
+        pred = self.model.predict([group], num_slots=ns)[0]
         share = self.cfg.epoch_steps / len(group)
         solo = np.array([self.model.solo_cpi(b) for b in sorted(group)])
         return float(np.sum(pred * solo * share))
@@ -341,8 +588,8 @@ class OnlineReplacer:
                    if t.name not in moves or moves[t.name] == ci]
             nxt += [self.tenants[n].bench for n, dst in moves.items()
                     if dst == ci and self.tenants[n].core != ci]
-            old += self._group_cycles(tuple(sorted(cur)))
-            new += self._group_cycles(tuple(sorted(nxt)))
+            old += self._group_cycles(tuple(sorted(cur)), core=ci)
+            new += self._group_cycles(tuple(sorted(nxt)), core=ci)
         return old - new
 
     # ------------------------------------------------------------------
@@ -351,13 +598,18 @@ class OnlineReplacer:
     def _target_assignment(self) -> dict[str, int]:
         """Re-solve placement for the current roster and align the solved
         cores to physical cores by membership overlap (a re-solve that
-        merely permutes core labels must imply zero moves)."""
-        roster = {t.name: t.bench for t in self.tenants.values()}
-        pl = place_tenants(roster,
-                           min(self.cfg.num_cores, len(roster)),
-                           self.model)
+        merely permutes core labels must imply zero moves).  Only tenants
+        on *up* cores are re-solved: stranded tenants come back through
+        the recovery path (`_recover`), never through rebalancing — the
+        separation keeps the recovery-policy comparison honest."""
+        up = self._up_cores()
+        roster = {t.name: t.bench for t in self.tenants.values()
+                  if t.core in up}
+        if len(roster) < 2 or not up:
+            return {}
+        pl = place_tenants(roster, min(len(up), len(roster)), self.model)
         solved = [set(core) for core in pl.cores]
-        unassigned = set(range(self.cfg.num_cores))
+        unassigned = set(up)
         target: dict[str, int] = {}
         current = {t.name: t.core for t in self.tenants.values()}
         order = sorted(
@@ -399,9 +651,11 @@ class OnlineReplacer:
 
     def rebalance(self, epoch: int) -> int:
         """One re-placement round; returns how many tenants moved."""
-        if self.policy == "never" or len(self.tenants) < 2:
+        if self.policy == "never":
             return 0
         target = self._target_assignment()
+        if not target:
+            return 0
         units = self._exchange_units(target)
         moved = 0
         # most beneficial unit first; re-price against the *current*
@@ -415,7 +669,15 @@ class OnlineReplacer:
             penalty = sum(self.migration_penalty(n) for n in unit)
             net = benefit - penalty
             take = self.policy == "always" or net > 0.0
-            self.moves.append({
+            blocked = False
+            if take:
+                # every leg's destination port must accept the reload;
+                # stalled legs enter backoff and the unit stays put
+                oks = [self._attempt_move(n, target[n], epoch,
+                                          why="rebalance") for n in unit]
+                if not all(oks):
+                    take, blocked = False, True
+            move = {
                 "epoch": epoch, "tenants": unit,
                 "src": tuple(self.tenants[n].core for n in unit),
                 "dst": tuple(target[n] for n in unit),
@@ -424,9 +686,13 @@ class OnlineReplacer:
                 "warm_fraction": tuple(self.warm_fraction(n)
                                        for n in unit),
                 "applied": take,
-            })
+            }
+            if blocked:
+                move["blocked"] = True
+            self.moves.append(move)
             if take:
                 for n in unit:
+                    self._retry.pop(n, None)
                     self.tenants[n].core = target[n]
                     self.tenants[n].migrations += 1
                     self.migrations += 1
@@ -434,12 +700,25 @@ class OnlineReplacer:
         return moved
 
     # ------------------------------------------------------------------
-    def run(self, events, num_epochs: int | None = None) -> OnlineReport:
+    def run(self, events, num_epochs: int | None = None, *,
+            checkpoint_every: int = 0, save_fn=None) -> OnlineReport:
         """Serve an event stream for `num_epochs` epochs (default: last
-        event epoch + 4 drain epochs)."""
+        event epoch + 4 drain epochs).
+
+        `checkpoint_every=k` calls ``save_fn(snapshot, epoch)`` after
+        every k-th completed epoch; a replacer `restore`d from such a
+        snapshot and `run` with the same arguments resumes at the next
+        epoch and finishes bit-for-bit identical to the uninterrupted
+        serve (the fault plan's randomness is counter-based, so the
+        replayed suffix sees the identical storm)."""
         events = list(events)
         if num_epochs is None:
             num_epochs = (max((e.epoch for e in events), default=0) + 5)
+        if checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every must be >= 0, got {checkpoint_every}")
+        if checkpoint_every and save_fn is None:
+            raise ValueError("checkpoint_every needs a save_fn")
         by_epoch: dict[int, list[TenantEvent]] = {}
         for e in events:
             if e.epoch >= num_epochs:
@@ -447,8 +726,23 @@ class OnlineReplacer:
                     f"event at epoch {e.epoch} outside the horizon "
                     f"{num_epochs}")
             by_epoch.setdefault(e.epoch, []).append(e)
-        epoch_log: list[dict] = []
-        for epoch in range(num_epochs):
+        if self.faults is not None \
+                and self.faults.max_core() >= self.cfg.num_cores:
+            raise ValueError(
+                f"fault plan targets core {self.faults.max_core()} but "
+                f"the fleet has {self.cfg.num_cores} cores")
+        for epoch in range(self._epoch, num_epochs):
+            any_fault = self._apply_faults(epoch)
+            if any_fault and self.recovery == "cold_restart":
+                # restart-everything baseline: every surviving core's
+                # caches are flushed, the whole fleet re-pays warm-up
+                for core in self.cores:
+                    if core.up:
+                        core.slot_st = slots.init(
+                            self.cfg.placement.num_slots)
+                        core.bs_st = slots.init(self.cfg.bs_cache_entries)
+                self.fault_log.append({"epoch": epoch,
+                                       "kind": "cold_restart"})
             todays = by_epoch.get(epoch, [])
             for e in todays:                      # departures first
                 if e.kind == "depart":
@@ -456,20 +750,142 @@ class OnlineReplacer:
             for e in todays:
                 if e.kind == "arrive":
                     self._arrive(e.name, e.bench)
+            self._recover(epoch)
             moved = self.rebalance(epoch)
             self._advance_epoch()
-            epoch_log.append({
+            # denied service: a stranded tenant should have retired
+            # epoch_steps instructions at its solo CPI — charge that as
+            # pure stall so lifetime slowdown reflects the outage
+            for t in self.tenants.values():
+                if t.core < 0 or not self.cores[t.core].up:
+                    t.stall_cycles += (self.cfg.epoch_steps
+                                       * self.model.solo_cpi(t.bench))
+            row = {
                 "epoch": epoch,
                 "tenants": len(self.tenants),
                 "moved": moved,
                 "cores": tuple(tuple(t.name for t in self._members(c))
                                for c in range(self.cfg.num_cores)),
-            })
-        return self._report(num_epochs, epoch_log)
+            }
+            if self.faults is not None:
+                row["down"] = tuple(ci for ci in range(self.cfg.num_cores)
+                                    if not self.cores[ci].up)
+            self.epoch_log.append(row)
+            self._epoch = epoch + 1
+            if checkpoint_every and (epoch + 1) % checkpoint_every == 0:
+                save_fn(self.snapshot(), epoch)
+        return self._report(num_epochs)
 
-    def _report(self, num_epochs: int, epoch_log: list) -> OnlineReport:
+    # ------------------------------------------------------------------
+    # checkpoint / restore (crash-restartable serving)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Complete host-side serving state as a plain dict of numpy
+        arrays and python scalars (`runtime.fault`-style): tenants with
+        cursors and counters, per-core caches and fault status, retry
+        ledger, and every log.  No RNG state — the fault plan's
+        randomness is counter-based and replays from the plan itself."""
+        def _core(c):
+            return {
+                "tags": np.asarray(c.slot_st.tags).copy(),
+                "last_use": np.asarray(c.slot_st.last_use).copy(),
+                "clock": int(c.slot_st.clock),
+                "bs_tags": np.asarray(c.bs_st.tags).copy(),
+                "bs_last_use": np.asarray(c.bs_st.last_use).copy(),
+                "bs_clock": int(c.bs_st.clock),
+                "up": c.up, "active_slots": c.active_slots,
+                "repair_at": c.repair_at,
+                "repair_degraded": c.repair_degraded,
+                "stall_until": c.stall_until,
+            }
+
+        def _tenant(t):
+            return {"name": t.name, "bench": t.bench, "core": t.core,
+                    "cursor": t.cursor, "cycles": t.cycles,
+                    "instrs": t.instrs, "slot_misses": t.slot_misses,
+                    "migrations": t.migrations,
+                    "evacuations": t.evacuations,
+                    "stall_cycles": t.stall_cycles}
+
+        return {
+            "version": 1,
+            "epoch": self._epoch,
+            "policy": self.policy,
+            "recovery": self.recovery,
+            "num_cores": self.cfg.num_cores,
+            "num_slots": self.cfg.placement.num_slots,
+            "bs_entries": self.cfg.bs_cache_entries,
+            "migrations": self.migrations,
+            "evacuations": self.evacuations,
+            "tenants": [_tenant(self.tenants[n])
+                        for n in sorted(self.tenants)],
+            "departed": [_tenant(t) for t in self.departed],
+            "cores": [_core(c) for c in self.cores],
+            "retry": copy.deepcopy(self._retry),
+            "moves": copy.deepcopy(self.moves),
+            "fault_log": copy.deepcopy(self.fault_log),
+            "epoch_log": copy.deepcopy(self.epoch_log),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Load a `snapshot` into this replacer; the next `run` resumes
+        at the snapshot's epoch.  The replacer must be constructed with
+        the same config/policy/recovery/fault plan as the one that saved
+        the snapshot."""
+        if snap.get("version") != 1:
+            raise ValueError(
+                f"unknown snapshot version {snap.get('version')!r}")
+        for key, mine in (("policy", self.policy),
+                          ("recovery", self.recovery),
+                          ("num_cores", self.cfg.num_cores),
+                          ("num_slots", self.cfg.placement.num_slots),
+                          ("bs_entries", self.cfg.bs_cache_entries)):
+            if snap[key] != mine:
+                raise ValueError(
+                    f"snapshot {key}={snap[key]!r} does not match this "
+                    f"replacer's {mine!r}")
+
+        def _tenant(d):
+            t = _TenantRun(d["name"], d["bench"], d["core"])
+            t.cursor = d["cursor"]
+            t.cycles = d["cycles"]
+            t.instrs = d["instrs"]
+            t.slot_misses = d["slot_misses"]
+            t.migrations = d["migrations"]
+            t.evacuations = d["evacuations"]
+            t.stall_cycles = d["stall_cycles"]
+            return t
+
+        self.tenants = {d["name"]: _tenant(d) for d in snap["tenants"]}
+        self.departed = [_tenant(d) for d in snap["departed"]]
+        self.cores = [_Core(self.cfg) for _ in range(self.cfg.num_cores)]
+        for core, d in zip(self.cores, snap["cores"]):
+            core.slot_st = slots.SlotState(
+                tags=jnp.asarray(d["tags"], jnp.int32),
+                last_use=jnp.asarray(d["last_use"], jnp.int32),
+                clock=jnp.int32(d["clock"]))
+            core.bs_st = slots.SlotState(
+                tags=jnp.asarray(d["bs_tags"], jnp.int32),
+                last_use=jnp.asarray(d["bs_last_use"], jnp.int32),
+                clock=jnp.int32(d["bs_clock"]))
+            core.up = d["up"]
+            core.active_slots = d["active_slots"]
+            core.repair_at = d["repair_at"]
+            core.repair_degraded = d["repair_degraded"]
+            core.stall_until = d["stall_until"]
+        self.migrations = snap["migrations"]
+        self.evacuations = snap["evacuations"]
+        self._retry = copy.deepcopy(snap["retry"])
+        self.moves = copy.deepcopy(snap["moves"])
+        self.fault_log = copy.deepcopy(snap["fault_log"])
+        self.epoch_log = copy.deepcopy(snap["epoch_log"])
+        self._epoch = snap["epoch"]
+
+    # ------------------------------------------------------------------
+    def _report(self, num_epochs: int) -> OnlineReport:
         per_tenant: dict[str, dict] = {}
         slowdowns = []
+        lifetimes = []
         records = {t.name: t for t in self.departed}
         records.update(self.tenants)
         for name in sorted(records):
@@ -477,15 +893,26 @@ class OnlineReplacer:
             if t.instrs == 0:
                 per_tenant[name] = {"bench": t.bench, "instrs": 0,
                                     "scheduled": False}
+                if t.stall_cycles > 0:
+                    # served nothing while stranded: unbounded slowdown
+                    per_tenant[name]["stall_cycles"] = t.stall_cycles
+                    per_tenant[name]["lifetime_slowdown"] = float("inf")
+                    lifetimes.append(float("inf"))
                 continue
             cpi = t.cycles / t.instrs
-            slow = cpi / self.model.solo_cpi(t.bench)
+            solo = self.model.solo_cpi(t.bench)
+            slow = cpi / solo
+            lifetime = (t.cycles + t.stall_cycles) / (t.instrs * solo)
             slowdowns.append(slow)
+            lifetimes.append(lifetime)
             per_tenant[name] = {
                 "bench": t.bench, "instrs": t.instrs, "cycles": t.cycles,
                 "slot_misses": t.slot_misses, "cpi": cpi,
-                "solo_cpi": self.model.solo_cpi(t.bench),
+                "solo_cpi": solo,
                 "slowdown": slow, "migrations": t.migrations,
+                "evacuations": t.evacuations,
+                "stall_cycles": t.stall_cycles,
+                "lifetime_slowdown": lifetime,
                 "scheduled": True,
             }
         return OnlineReport(
@@ -498,5 +925,9 @@ class OnlineReplacer:
             final_cores=tuple(tuple(t.name for t in self._members(c))
                               for c in range(self.cfg.num_cores)),
             moves=self.moves,
-            epoch_log=epoch_log,
+            epoch_log=self.epoch_log,
+            recovery=self.recovery,
+            evacuations=self.evacuations,
+            worst_lifetime_slowdown=(max(lifetimes) if lifetimes else 0.0),
+            fault_log=self.fault_log,
         )

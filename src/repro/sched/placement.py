@@ -181,7 +181,8 @@ class ContentionModel:
         return self._solo_miss_rate[bench]
 
     # ------------------------------------------------------------------
-    def predict(self, groups) -> list[np.ndarray]:
+    def predict(self, groups, *, num_slots: int | None = None
+                ) -> list[np.ndarray]:
         """Per-tenant slowdown vectors for a sequence of bench groups.
 
         Each group is a sequence of benchmark names (any order; the result
@@ -189,11 +190,27 @@ class ContentionModel:
         groups sharing a (size, per-program taxonomy) signature are
         simulated in a single `sweep_fleet` call — with no per-tenant
         scenario mapping that is exactly "one call per size".
+
+        `num_slots` prices the group on a core with fewer usable slots
+        (a fault-degraded core, `repro.sched.faults`): the candidate
+        sweep runs at that slot count while the solo reference stays at
+        full width, so a degraded core's predictions are intrinsically
+        down-weighted — the extra thrashing of the smaller disambiguator
+        shows up as extra slowdown.  Predictions are cached per
+        (group, slot count); the default width keeps the historical
+        cache keys.
         """
+        ns = self.cfg.num_slots if num_slots is None else int(num_slots)
+        if not 1 <= ns <= self.cfg.num_slots:
+            raise ValueError(
+                f"num_slots must be in [1, {self.cfg.num_slots}] (the "
+                f"configured core width), got {num_slots}")
+        ckey = ((lambda k: k) if ns == self.cfg.num_slots
+                else (lambda k: (k, ns)))
         keys = [tuple(sorted(g)) for g in groups]
         todo: dict[tuple, list[tuple[str, ...]]] = {}
         for k in dict.fromkeys(keys):      # unique, order-preserving
-            if k and k not in self._groups:
+            if k and ckey(k) not in self._groups:
                 sig = tuple(self.scenario_of(b).name for b in k)
                 todo.setdefault((len(k), sig), []).append(k)
         for (size, _sig), ks in sorted(todo.items()):
@@ -206,7 +223,7 @@ class ContentionModel:
                 tensor, [self.cfg.miss_latency],
                 [self.scenario_of(b) for b in ks[0]],
                 self.cfg.scheduler(),
-                slot_counts=[self.cfg.num_slots],
+                slot_counts=[ns],
                 total_steps=size * self.cfg.steps_per_program,
                 path=self.path)
             self.sim_calls += 1
@@ -218,8 +235,10 @@ class ContentionModel:
                 slow = cpis[gi] / solo
                 # a tenant the rotation never reached has no CPI: treat as
                 # unboundedly contended, never as "free"
-                self._groups[k] = np.where(instrs[gi] > 0, slow, np.inf)
-        return [self._groups[k] if k else np.zeros((0,)) for k in keys]
+                self._groups[ckey(k)] = np.where(instrs[gi] > 0, slow,
+                                                 np.inf)
+        return [self._groups[ckey(k)] if k else np.zeros((0,))
+                for k in keys]
 
 
 # ---------------------------------------------------------------------------

@@ -190,7 +190,8 @@ class SlotServeEngine:
 
     def serve_online(self, events, *, policy: str = "warm",
                      num_cores: int = 2, model=None, online_cfg=None,
-                     num_epochs: int | None = None, apply_core=None):
+                     num_epochs: int | None = None, apply_core=None,
+                     faults=None, recovery: str = "warm"):
         """Serve a churn workload (tenants arriving/leaving mid-serve)
         with online re-placement — the dynamic counterpart of the static
         `plan_coresidency` flow.
@@ -208,6 +209,15 @@ class SlotServeEngine:
         afterwards restricts itself to the tenants the final placement
         left on that core (deferred/other-core tenants are parked like
         `apply_admission` does).
+
+        `faults` (a `repro.sched.FaultPlan`) injects a deterministic
+        fault storm into the serve; `recovery` picks the reaction
+        (`repro.sched.RECOVERY_POLICIES`: "warm" evacuation /
+        "cold_restart" / "none") — the report's `fault_log` and
+        `worst_lifetime_slowdown` quantify the outcome.  Faulted epochs
+        may route segments through the cycle-by-cycle scan: SEU- or
+        flush-mutated caches are not interleaved-seedable until they
+        re-warm, and degraded (masked) cores always scan.
         """
         from repro.sched.online import OnlineConfig, OnlineReplacer
         from repro.sched.placement import PlacementConfig
@@ -217,8 +227,9 @@ class SlotServeEngine:
                 num_cores=num_cores,
                 placement=PlacementConfig(
                     num_slots=self.ecfg.slots_per_shard))
-        rep = OnlineReplacer(online_cfg, model=model,
-                             policy=policy).run(events, num_epochs)
+        rep = OnlineReplacer(online_cfg, model=model, policy=policy,
+                             faults=faults,
+                             recovery=recovery).run(events, num_epochs)
         if apply_core is not None:
             if not 0 <= apply_core < len(rep.final_cores):
                 raise ValueError(

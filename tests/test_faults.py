@@ -1,0 +1,479 @@
+"""Fault injection & chaos-hardened serving (repro.sched.faults +
+FleetState surgery in repro.core.simulator + OnlineReplacer recovery).
+
+Pins the PR's core equivalences and behaviours:
+
+  * degraded-core property: `num_active=k` masking over an S-slot
+    disambiguator is bit-for-bit an LRU cache of physical size k — via
+    `sweep_fleet`'s masked scan cells AND `simulate_many(num_active=k)`
+    (seeded always-on variant + hypothesis variant under the "ci"
+    profile, like test_stackdist_interleaved.py);
+  * FleetState surgery (`seu_fleet_state` / `flush_bitstream` /
+    `degrade_fleet_state`) and its dispatch consequences: mutated states
+    ride the scan for one segment, then re-qualify for the resumable
+    interleaved entry once the caches re-warm;
+  * FaultPlan determinism (storm + per-event counter-based rng);
+  * OnlineReplacer recovery: warm evacuation vs stranding, reconfig
+    backoff retries, lifetime-slowdown accounting, checkpoint/restore
+    crash-restart parity, benchmarks/run.py --only typo detection.
+"""
+import jax
+import numpy as np
+import pytest
+from fleet_asserts import assert_fleet_equal
+
+from repro.core import isa, simulator, slots, traces
+from repro.sched import (ContentionModel, FaultEvent, FaultPlan,
+                         OnlineConfig, OnlineReplacer, PlacementConfig,
+                         TenantEvent)
+from repro.sched.faults import FAULT_KINDS, RECOVERY_POLICIES
+
+CFG4 = simulator.ReconfigConfig(num_slots=4, miss_latency=50)
+BENCHES = ["minver", "nbody", "crc32", "cubic"]
+
+
+def fleet(p=2, n=3_000):
+    return np.stack([traces.build_trace(b, n) for b in BENCHES[:p]])
+
+
+def assert_state_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# degraded-core property: masking == physically smaller cache, bit for bit
+# ---------------------------------------------------------------------------
+
+def _check_masked_equals_physical(ops, p, k, smax, quantum, lat):
+    """Core property check shared by the seeded and hypothesis variants:
+    the K=k cell of a masked smax-allocated scan sweep equals the
+    physically k-slot sweep, and `simulate_many(num_active=k)` equals the
+    physically k-slot `simulate_many` — counters AND final caches."""
+    tr = np.asarray(ops, np.int32).reshape(p, -1)
+    sched = simulator.SchedulerConfig(quantum_cycles=quantum)
+    total = tr.shape[1] * 2
+    kw = dict(slot_counts=None, total_steps=total, path="scan")
+
+    kw["slot_counts"] = [k, smax]
+    both = simulator.sweep_fleet(tr[None], [lat], isa.SCENARIO_2, sched,
+                                 **kw)
+    kw["slot_counts"] = [k]
+    phys = simulator.sweep_fleet(tr[None], [lat], isa.SCENARIO_2, sched,
+                                 **kw)
+    for field, x, y in zip(both._fields, both, phys):
+        np.testing.assert_array_equal(
+            np.asarray(x)[:, 0], np.asarray(y)[:, 0],
+            err_msg=f"sweep cell K={k} of {smax}: field {field}")
+
+    cfg_m = simulator.ReconfigConfig(num_slots=smax, miss_latency=lat)
+    cfg_p = simulator.ReconfigConfig(num_slots=k, miss_latency=lat)
+    res_m, st_m = simulator.simulate_many(
+        tr, cfg_m, isa.SCENARIO_2, sched, total, num_active=k,
+        return_state=True)
+    res_p, st_p = simulator.simulate_many(
+        tr, cfg_p, isa.SCENARIO_2, sched, total, return_state=True)
+    assert_fleet_equal(res_m, res_p)
+    # the masked cache IS the k-slot cache plus permanently-dead slots:
+    # canonical (LRU-ascending prefix) layouts coincide on the live k
+    tags_m = np.asarray(st_m.slot_st.tags)
+    np.testing.assert_array_equal(tags_m[:k],
+                                  np.asarray(st_p.slot_st.tags))
+    np.testing.assert_array_equal(np.asarray(st_m.slot_st.last_use)[:k],
+                                  np.asarray(st_p.slot_st.last_use))
+    assert (tags_m[k:] == -1).all()
+    assert int(st_m.slot_st.clock) == int(st_p.slot_st.clock)
+    assert_state_equal(st_m.bs_st, st_p.bs_st)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_masked_slots_equal_physical_cache_seeded(k):
+    tr = fleet(2, 2_000)
+    _check_masked_equals_physical(tr, 2, k, 4, quantum=1_500, lat=50)
+
+
+def test_masked_slots_equal_physical_cache_random_seeded():
+    """Always-on seeded variant over random traces/geometries."""
+    rng = np.random.default_rng(20_260_809)
+    for _ in range(4):
+        p = int(rng.integers(1, 4))
+        smax = int(rng.integers(2, 7))
+        k = int(rng.integers(1, smax))
+        ops = rng.integers(0, isa.NUM_INSTRUCTIONS, (p, 1_200))
+        _check_masked_equals_physical(
+            ops, p, k, smax, quantum=int(rng.integers(300, 2_000)),
+            lat=int(rng.integers(0, 200)))
+
+
+try:  # dev extra, not a runtime dep — only these tests skip without it
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    # HYPOTHESIS_PROFILE=ci (tests/conftest.py) pins this sweep in CI
+    @settings(max_examples=20, deadline=None)
+    @given(
+        ops=st.lists(st.integers(0, isa.NUM_INSTRUCTIONS - 1),
+                     min_size=1, max_size=64),
+        p=st.integers(1, 3),
+        smax=st.integers(2, 6),
+        k_frac=st.floats(0.0, 0.999),
+        quantum=st.integers(50, 2_000),
+        lat=st.integers(0, 200),
+    )
+    def test_masked_slots_equal_physical_cache(ops, p, smax, k_frac,
+                                               quantum, lat):
+        """Random trace/geometry: `num_active=k` masking must be
+        bit-for-bit an LRU cache of physical size k."""
+        k = 1 + int(k_frac * (smax - 1))
+        tr = np.tile(np.asarray(ops, np.int32), (p, 1))
+        _check_masked_equals_physical(tr, p, k, smax, quantum, lat)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+    def test_masked_slots_equal_physical_cache():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# FleetState surgery + dispatch consequences
+# ---------------------------------------------------------------------------
+
+def warm_state(p=2, total=6_000):
+    tr = fleet(p)
+    sched = simulator.SchedulerConfig(quantum_cycles=1_500)
+    _, st = simulator.simulate_many(tr, CFG4, isa.SCENARIO_2, sched,
+                                    total, return_state=True)
+    return tr, sched, st
+
+
+def test_seu_surgery_kills_chosen_residents_and_keeps_lru_order():
+    _, _, st = warm_state()
+    tags0 = np.asarray(st.slot_st.tags)
+    occupied = np.nonzero(tags0 >= 0)[0]
+    assert occupied.size >= 2
+    hit = occupied[:2]
+    mut = simulator.seu_fleet_state(st, hit)
+    tags1 = np.asarray(mut.slot_st.tags)
+    # canonical layout: survivors prefix-packed in LRU-ascending order,
+    # the SEU'd entries gone
+    survivors = [t for i, t in enumerate(tags0) if t >= 0 and i not in hit]
+    assert sorted(tags1[tags1 >= 0].tolist()) == sorted(survivors)
+    assert int((tags1 >= 0).sum()) == len(survivors)
+    with pytest.raises(ValueError, match="out of range"):
+        simulator.seu_fleet_state(st, [99])
+
+
+def test_flush_bitstream_colds_only_the_bs_cache():
+    _, _, st = warm_state()
+    mut = simulator.flush_bitstream(st)
+    assert int(slots.occupancy(mut.bs_st)) == 0
+    assert int(mut.bs_st.clock) == 0
+    assert_state_equal(mut.slot_st, st.slot_st)
+
+
+def test_degrade_fleet_state_packs_mru_residents_into_prefix():
+    _, _, st = warm_state()
+    tags0 = np.asarray(simulator.canonical_slot_state(st.slot_st).tags)
+    filled = int((tags0 >= 0).sum())
+    assert filled >= 3
+    k = 2
+    deg = simulator.degrade_fleet_state(st, k)
+    tags1 = np.asarray(deg.slot_st.tags)
+    assert int((tags1 >= 0).sum()) == k
+    assert (tags1[k:] == -1).all()
+    # canonical order is LRU-ascending, so the survivors are the most
+    # recently used residents (the LRU ones fell into the dead slots)
+    assert sorted(tags1[:k].tolist()) == \
+        sorted(tags0[filled - k:filled].tolist())
+    for bad in (0, 5):
+        with pytest.raises(ValueError):
+            simulator.degrade_fleet_state(st, bad)
+
+
+def test_masked_resume_validates_and_interleaved_refuses():
+    tr, sched, st = warm_state()
+    with pytest.raises(ValueError, match="degrade_fleet_state"):
+        simulator.simulate_many(tr, CFG4, isa.SCENARIO_2, sched, 2_000,
+                                state=st, num_active=2)
+    with pytest.raises(ValueError, match="scan"):
+        simulator.simulate_many(tr, CFG4, isa.SCENARIO_2, sched, 2_000,
+                                num_active=2, path="interleaved")
+    deg = simulator.degrade_fleet_state(st, 2)
+    res = simulator.simulate_many(tr, CFG4, isa.SCENARIO_2, sched, 2_000,
+                                  state=deg, num_active=2)
+    assert int(np.asarray(res.instructions).sum()) > 0
+
+
+def test_mutated_states_scan_one_segment_then_reseed(resume_spy):
+    """SEU- and flush-mutated states are not interleaved-seedable (the
+    caches no scan could have produced), so the next resumed segment
+    rides the scan; the segment re-warms the caches and the one after
+    re-qualifies for the resumable interleaved entry."""
+    tr, sched, st = warm_state()
+    for mutate in (lambda s: simulator.seu_fleet_state(
+                       s, np.nonzero(
+                           np.asarray(s.slot_st.tags) >= 0)[0][:1]),
+                   simulator.flush_bitstream):
+        mut = mutate(st)
+        n0 = len(resume_spy)
+        _, st1 = simulator.simulate_many(
+            tr, CFG4, isa.SCENARIO_2, sched, 4_000, state=mut,
+            return_state=True)
+        assert len(resume_spy) == n0          # scan served the segment
+        simulator.simulate_many(tr, CFG4, isa.SCENARIO_2, sched, 2_000,
+                                state=st1)
+        assert len(resume_spy) == n0 + 1      # re-warmed -> fast again
+        # and the scan fallback is still bit-for-bit the forced scan
+        a = simulator.simulate_many(tr, CFG4, isa.SCENARIO_2, sched,
+                                    1_000, state=mut)
+        b = simulator.simulate_many(tr, CFG4, isa.SCENARIO_2, sched,
+                                    1_000, state=mut, path="scan")
+        assert_fleet_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: validation, ordering, deterministic storms
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent(0, "meteor", 0)
+    with pytest.raises(ValueError, match="epoch"):
+        FaultEvent(-1, "core_loss", 0)
+    with pytest.raises(ValueError, match="repair_epochs"):
+        FaultEvent(0, "core_loss", 0, repair_epochs=0)
+    with pytest.raises(ValueError, match="num_hit"):
+        FaultEvent(0, "slot_seu", 0, num_hit=0)
+    with pytest.raises(ValueError, match="stall_epochs"):
+        FaultEvent(0, "reconfig_stall", 0, stall_epochs=0)
+    with pytest.raises(TypeError):
+        FaultPlan(events=("not-an-event",))
+
+
+def test_fault_plan_sorts_and_indexes():
+    plan = FaultPlan(events=(
+        FaultEvent(4, "slot_seu", 0),
+        FaultEvent(1, "core_loss", 2),
+        FaultEvent(1, "core_loss", 0),
+    ), seed=5)
+    assert [e.epoch for e in plan.events] == [1, 1, 4]
+    assert [e.core for e in plan.events] == [0, 2, 0]
+    assert plan.horizon() == 5 and plan.max_core() == 2
+    assert plan.at(1) == list(plan.events[:2]) and plan.at(3) == []
+    # per-event rng is counter-based: same event -> same stream, and
+    # independent of any other event's draws
+    ev = plan.events[2]
+    a = plan.rng(ev).integers(0, 1_000, 8)
+    b = plan.rng(ev).integers(0, 1_000, 8)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_storm_is_seed_deterministic_and_keeps_one_core_up():
+    s1 = FaultPlan.storm(seed=3, num_epochs=20, num_cores=3)
+    s2 = FaultPlan.storm(seed=3, num_epochs=20, num_cores=3)
+    assert s1 == s2
+    assert s1 != FaultPlan.storm(seed=4, num_epochs=20, num_cores=3)
+    # throttle invariant: never all cores down at once
+    crowded = FaultPlan.storm(seed=1, num_epochs=30, num_cores=2,
+                              p_core_loss=0.9, p_permanent=0.5)
+    down_until: dict = {}
+    for ev in crowded.events:
+        if ev.kind != "core_loss":
+            continue
+        down = {c for c, u in down_until.items() if ev.epoch < u}
+        assert len(down) < 2
+        down_until[ev.core] = (np.inf if ev.permanent
+                               else ev.epoch + ev.repair_epochs)
+
+
+# ---------------------------------------------------------------------------
+# OnlineReplacer recovery
+# ---------------------------------------------------------------------------
+
+PCFG = PlacementConfig(num_slots=4, miss_latency=50,
+                       quantum_cycles=2_000, trace_len=2_000,
+                       steps_per_program=2_000)
+OCFG = OnlineConfig(num_cores=3, epoch_steps=3_000, probe_steps=800,
+                    placement=PCFG)
+EVENTS = [TenantEvent(0, "arrive", "a", "minver"),
+          TenantEvent(0, "arrive", "b", "cubic"),
+          TenantEvent(0, "arrive", "c", "crc32"),
+          TenantEvent(1, "arrive", "d", "tarfind")]
+
+
+@pytest.fixture(scope="module")
+def model():
+    return ContentionModel(PCFG)
+
+
+def _loss_plan(**kw):
+    return FaultPlan(events=(
+        FaultEvent(2, "core_loss", kw.pop("core", 0), **kw),), seed=1)
+
+
+def test_replacer_fault_arg_validation(model):
+    with pytest.raises(ValueError, match="recovery"):
+        OnlineReplacer(OCFG, model=model, recovery="pray")
+    with pytest.raises(TypeError, match="FaultPlan"):
+        OnlineReplacer(OCFG, model=model, faults=[FaultEvent(
+            0, "core_loss", 0)])
+    rep = OnlineReplacer(OCFG, model=model, faults=_loss_plan(core=9))
+    with pytest.raises(ValueError, match="core 9"):
+        rep.run(EVENTS, 5)
+    with pytest.raises(ValueError, match="save_fn"):
+        OnlineReplacer(OCFG, model=model).run(EVENTS, 5,
+                                              checkpoint_every=2)
+
+
+def test_core_loss_warm_evacuates_none_strands(model):
+    plan = _loss_plan(repair_epochs=2)
+    warm = OnlineReplacer(OCFG, model=model, faults=plan,
+                          recovery="warm").run(EVENTS, 6)
+    assert warm.evacuations >= 1
+    evacs = [f for f in warm.fault_log if f["kind"] == "evacuation"]
+    assert evacs and all(f["src"] == 0 for f in evacs)
+    assert all(t.get("stall_cycles", 0.0) == 0.0
+               for t in warm.per_tenant.values())
+    # recovery separated from migration policy: the loss is detected
+    loss = [f for f in warm.fault_log if f["kind"] == "core_loss"]
+    assert loss and loss[0]["stranded"] == tuple(f["tenant"]
+                                                 for f in evacs)
+
+    none = OnlineReplacer(OCFG, model=model, faults=plan,
+                          recovery="none").run(EVENTS, 6)
+    assert none.evacuations == 0
+    stranded = [t for t in none.per_tenant.values()
+                if t.get("stall_cycles", 0.0) > 0.0]
+    assert stranded      # someone sat out the outage
+    assert none.worst_lifetime_slowdown > none.worst_slowdown
+    assert warm.worst_lifetime_slowdown <= \
+        none.worst_lifetime_slowdown + 1e-9
+    # the repaired core came back and the repair is logged
+    assert any(f["kind"] == "repair" for f in warm.fault_log)
+
+
+def test_degraded_repair_masks_slots_and_prices_reduced_width(model):
+    plan = _loss_plan(repair_epochs=1, degraded_slots=2)
+    rep = OnlineReplacer(OCFG, model=model, faults=plan, recovery="warm")
+    rep.run(EVENTS, 6)
+    repair = [f for f in rep.fault_log if f["kind"] == "repair"]
+    assert repair and repair[0]["active_slots"] == 2
+    assert rep.cores[0].active_slots == 2
+    # the dead slots never fill, even after epochs of serving
+    assert (np.asarray(rep.cores[0].slot_st.tags)[2:] == -1).all()
+    # degraded-width predictions are cached under (group, width) keys
+    assert any(k and isinstance(k[-1], int) and k[-1] == 2
+               for k in model._groups)
+
+
+def test_reconfig_stall_blocks_evacuation_with_capped_backoff(model):
+    # every surviving core's port stalls at the loss epoch: the
+    # evacuation is blocked, backs off, and lands when the stall clears
+    plan = FaultPlan(events=(
+        FaultEvent(2, "core_loss", 0, repair_epochs=4),
+        FaultEvent(2, "reconfig_stall", 1, stall_epochs=1),
+        FaultEvent(2, "reconfig_stall", 2, stall_epochs=1),
+    ), seed=1)
+    rep = OnlineReplacer(OCFG, model=model, faults=plan,
+                         recovery="warm").run(EVENTS, 7)
+    retries = [f for f in rep.fault_log if f["kind"] == "reconfig_retry"]
+    evacs = [f for f in rep.fault_log if f["kind"] == "evacuation"]
+    assert retries and all(r["epoch"] == 2 for r in retries)
+    assert all(r["next_attempt"] == 3 for r in retries)
+    assert evacs and all(f["epoch"] == 3 for f in evacs)
+    assert all(f["retries"] == 1 for f in evacs)
+
+
+def test_backoff_delay_is_capped():
+    rep = OnlineReplacer(OCFG, model=ContentionModel(PCFG),
+                         faults=_loss_plan(), backoff_cap=4)
+    rep.cores[1].stall_until = 100
+    for epoch in range(0, 40):
+        rep._attempt_move("t", 1, epoch, why="test")
+    retries = rep._retry["t"]["retries"]
+    assert retries >= 4
+    # delays: 1, 2, 4, 4, 4, ... — capped at backoff_cap
+    assert rep._retry["t"]["next"] <= 39 + 4
+
+
+def test_cold_restart_flushes_survivors(model):
+    plan = _loss_plan(repair_epochs=2)
+    rep = OnlineReplacer(OCFG, model=model, faults=plan,
+                         recovery="cold_restart")
+    out = rep.run(EVENTS, 6)
+    assert any(f["kind"] == "cold_restart" for f in out.fault_log)
+    assert out.evacuations >= 1   # cold_restart still evacuates
+
+
+def test_checkpoint_restore_is_bit_for_bit(model):
+    plan = FaultPlan(events=(
+        FaultEvent(2, "core_loss", 0, repair_epochs=2, degraded_slots=1),
+        FaultEvent(3, "slot_seu", 1, num_hit=1),
+        FaultEvent(4, "bitstream_flush", 2),
+    ), seed=9)
+    snaps = {}
+    full = OnlineReplacer(OCFG, model=model, policy="warm", faults=plan,
+                          recovery="warm")
+    rep1 = full.run(EVENTS, 7, checkpoint_every=3,
+                    save_fn=lambda s, e: snaps.setdefault(e, s))
+    assert sorted(snaps) == [2, 5]
+    for epoch in (2, 5):
+        fresh = OnlineReplacer(OCFG, model=ContentionModel(PCFG),
+                               policy="warm", faults=plan,
+                               recovery="warm")
+        fresh.restore(snaps[epoch])
+        rep2 = fresh.run(EVENTS, 7)
+        assert rep2.per_tenant == rep1.per_tenant, epoch
+        assert rep2.fault_log == rep1.fault_log, epoch
+        assert rep2.moves == rep1.moves, epoch
+        assert rep2.epoch_log == rep1.epoch_log, epoch
+        assert rep2.final_cores == rep1.final_cores, epoch
+    # geometry/policy mismatches are refused
+    other = OnlineReplacer(OCFG, model=model, policy="always",
+                           faults=plan, recovery="warm")
+    with pytest.raises(ValueError, match="policy"):
+        other.restore(snaps[2])
+
+
+def test_no_fault_serve_unchanged_by_fault_machinery(model):
+    """faults=None must be bit-for-bit the pre-fault serve: same moves,
+    same epoch-log schema, lifetime == classic slowdown."""
+    rep = OnlineReplacer(OCFG, model=model, policy="warm").run(EVENTS, 6)
+    assert rep.fault_log == [] and rep.evacuations == 0
+    assert all(set(row) == {"epoch", "tenants", "moved", "cores"}
+               for row in rep.epoch_log)
+    for t in rep.per_tenant.values():
+        if t["scheduled"]:
+            assert t["lifetime_slowdown"] == pytest.approx(t["slowdown"])
+    assert rep.worst_lifetime_slowdown == pytest.approx(
+        rep.worst_slowdown)
+
+
+def test_serve_online_passes_faults_through(model):
+    """Engine wiring: SlotServeEngine.serve_online(faults=...) reaches
+    the replacer (checked structurally, no model build needed)."""
+    import inspect
+
+    from repro.serve.engine import SlotServeEngine
+    sig = inspect.signature(SlotServeEngine.serve_online)
+    assert "faults" in sig.parameters and "recovery" in sig.parameters
+    assert sig.parameters["recovery"].default == "warm"
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py --only typo detection
+# ---------------------------------------------------------------------------
+
+def test_bench_runner_rejects_unmatched_only(capsys):
+    from benchmarks.run import main
+    with pytest.raises(SystemExit) as exc:
+        main(["--only", "fig6,apocalypse"])
+    assert exc.value.code != 0
+    err = capsys.readouterr().err
+    assert "apocalypse" in err and "chaos_serve" in err
+    with pytest.raises(SystemExit):
+        main(["--only", "definitely-not-a-bench"])

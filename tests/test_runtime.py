@@ -139,6 +139,45 @@ def test_straggler_monitor_flags_slow_steps():
     assert not mon.observe(21, 0.11)
 
 
+def test_straggler_monitor_times_bounded_by_window():
+    """The sliding window is also the storage bound: a long run must not
+    accrete one float per step forever."""
+    mon = fault.StragglerMonitor(window=16, threshold=2.0)
+    for i in range(500):
+        mon.observe(i, 0.1)
+    assert len(mon.times) == 16
+    # trimming must not change detection: the median window still sees
+    # the same last-16 history
+    assert mon.observe(500, 0.5)
+
+
+def test_run_supervised_custom_retryable():
+    """A widened `retryable` tuple absorbs infrastructure exceptions the
+    default policy would propagate."""
+    class FlakyIO(OSError):
+        pass
+
+    failed = {"done": False}
+
+    def fail_hook(step):
+        if step == 2 and not failed["done"]:
+            failed["done"] = True
+            raise FlakyIO("transient")
+
+    kw = dict(init_fn=lambda: ({}, 0), step_fn=lambda s, i: (s, {}),
+              save_fn=lambda s, i: None, restore_fn=lambda: ({}, 0),
+              num_steps=5, ckpt_every=100, fail_hook=fail_hook)
+    # default policy: FlakyIO is not retryable -> propagates
+    with pytest.raises(FlakyIO):
+        fault.run_supervised(**kw)
+    failed["done"] = False
+    report = fault.run_supervised(
+        retryable=(fault.TrainingFailure, FlakyIO), **kw)
+    assert report["restarts"] == 1 and report["final_step"] == 5
+    with pytest.raises(TypeError, match="retryable"):
+        fault.run_supervised(retryable=("not-a-type",), **kw)
+
+
 def test_heartbeat(tmp_path):
     hb = fault.Heartbeat(str(tmp_path / "hb.json"))
     hb.beat(3, 0.5)
