@@ -132,6 +132,14 @@ def bench_chaos_serve():
     return lines, head[2:]
 
 
+def bench_model_serve_study():
+    """Model-zoo fleets (prefill/decode workloads) through place_tenants."""
+    from benchmarks import model_serve_study
+    lines, _ = model_serve_study.run()
+    head = [l for l in lines if l.startswith("# finding")][0]
+    return lines, head[2:]
+
+
 BENCHES = {
     "fig4_extensions": bench_fig4,
     "fig5_classification": bench_fig5,
@@ -147,7 +155,53 @@ BENCHES = {
     "placement_search": bench_placement_search,
     "online_churn": bench_online_churn,
     "chaos_serve": bench_chaos_serve,
+    "model_serve_study": bench_model_serve_study,
 }
+
+# registration audit: every benchmark module in this directory must either
+# back a BENCHES entry or be listed here with the reason it is excluded.
+# `audit_registration()` enforces the invariant (tests call it), so a new
+# module that forgets both shows up as a test failure, not a silent orphan.
+MODULE_OF = {
+    "fig4_extensions": "fig4_extensions",
+    "fig5_classification": "fig5_classification",
+    "fig6_single": "fig6_single",
+    "fig7_multi": "fig7_multi",
+    "fleet_sweep": "fig7_multi",            # second entry point (run_fleets)
+    "expert_slots": "bench_expert_slots",
+    "bitstream_study": "bitstream_study",
+    "perf_slot_decode": "perf_slot_decode",
+    "roofline_table": "roofline_table",
+    "perf_sweep": "perf_sweep",
+    "placement_study": "placement_study",
+    "placement_search": "placement_search",
+    "online_churn": "online_churn",
+    "chaos_serve": "chaos_serve",
+    "model_serve_study": "model_serve_study",
+}
+EXCLUDED = {
+    "run": "the harness itself",
+    "perf_gate": "CI gate comparing BENCH_fleet.json across refs, "
+                 "not a benchmark",
+}
+
+
+def audit_registration() -> None:
+    """Raise if any benchmarks/*.py module is neither registered (MODULE_OF)
+    nor explicitly excluded (EXCLUDED), or if either map is stale."""
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    modules = {os.path.splitext(f)[0] for f in os.listdir(bench_dir)
+               if f.endswith(".py") and not f.startswith("_")}
+    missing_map = set(BENCHES) - set(MODULE_OF)
+    registered = set(MODULE_OF.values())
+    orphans = modules - registered - set(EXCLUDED)
+    stale = (registered | set(EXCLUDED)) - modules
+    if missing_map or orphans or stale:
+        raise AssertionError(
+            f"benchmark registration audit failed: "
+            f"BENCHES entries missing from MODULE_OF={sorted(missing_map)}, "
+            f"orphan modules={sorted(orphans)}, "
+            f"stale references={sorted(stale)}")
 
 
 def _record_fleet_json(results: dict) -> None:

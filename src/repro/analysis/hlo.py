@@ -344,10 +344,7 @@ def _comp_cost(comp: Computation, comps, memo) -> Cost:
     return total
 
 
-def analyze_module(text: str) -> dict:
-    """Per-device {flops, bytes, collective_bytes, collectives} with scan
-    trip counts applied."""
-    comps = parse_module(text)
+def _entry_name(text: str, comps: dict[str, Computation]) -> str:
     entry = None
     for line in text.splitlines():
         if line.startswith("ENTRY"):
@@ -358,6 +355,14 @@ def analyze_module(text: str) -> dict:
     if entry is None or entry not in comps:
         # fall back: largest computation
         entry = max(comps, key=lambda c: len(comps[c].instrs))
+    return entry
+
+
+def analyze_module(text: str) -> dict:
+    """Per-device {flops, bytes, collective_bytes, collectives} with scan
+    trip counts applied."""
+    comps = parse_module(text)
+    entry = _entry_name(text, comps)
     cost = _comp_cost(comps[entry], comps, {})
     return {
         "flops": cost.flops,
@@ -365,6 +370,101 @@ def analyze_module(text: str) -> dict:
         "collective_bytes": cost.coll_bytes,
         "collectives": cost.coll_counts,
     }
+
+
+# ---------------------------------------------------------------------------
+# executed-op histogram (the workloads layer's per-op accounting source)
+# ---------------------------------------------------------------------------
+
+_FLOAT_DTYPES = {"f16", "bf16", "f32", "f64", "c64", "c128"}
+
+
+def _dtype_class(shape_str: str) -> str:
+    """'f' for float/complex results, 'i' for integer/pred ones."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return "i"
+    return "f" if m.group(1) in _FLOAT_DTYPES else "i"
+
+
+def _comp_hist(comp: Computation, comps, memo) -> dict[str, float]:
+    """Executed-op histogram of one computation: ``"op:dtypeclass"`` ->
+    output-element count (``"dot:f"`` / ``"convolution:f"`` -> FLOPs),
+    rolled up through the call graph with `while` trip multipliers —
+    the same traversal as `_comp_cost`, but keeping per-opcode identity
+    instead of collapsing everything into three roofline numerators."""
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = {}  # cycle guard
+    total: dict[str, float] = {}
+
+    def acc(d: dict, k: float = 1.0) -> None:
+        for key, v in d.items():
+            total[key] = total.get(key, 0.0) + v * k
+
+    for inst in comp.instrs:
+        op = inst.op
+        base = op.replace("-start", "").replace("-done", "")
+        if op.endswith("-done"):
+            continue
+        called = []
+        for attr, mult_kind in (("calls", "call"), ("body", "body"),
+                                ("condition", "cond"),
+                                ("branch_computations", "call"),
+                                ("to_apply", "call")):
+            am = re.search(attr + r"=\{?%?([\w.\-]+(?:, *%[\w.\-]+)*)\}?",
+                           inst.rest)
+            if am:
+                for cname in re.findall(r"[\w.\-]+", am.group(1)):
+                    if cname in comps:
+                        called.append((mult_kind, cname))
+        if op == "while":
+            body = next((c for k, c in called if k == "body"), None)
+            cond = next((c for k, c in called if k == "cond"), None)
+            trips = _trip_count(comps[cond]) if cond else 1
+            if body:
+                acc(_comp_hist(comps[body], comps, memo), trips)
+            if cond:
+                acc(_comp_hist(comps[cond], comps, memo), trips)
+            continue
+        for _, cname in called:
+            # fused/called interiors execute element-for-element
+            acc(_comp_hist(comps[cname], comps, memo))
+        if called or base in _COLLECTIVES or base in _PLUMBING:
+            continue
+        if base in ("dot", "convolution"):
+            total["dot:f"] = total.get("dot:f", 0.0) + _dot_flops(inst, comp)
+            continue
+        if base in ("compare", "select", "reduce", "reduce-window"):
+            # result dtype lies (compare -> pred, reduce collapses); judge
+            # by the first operand, and charge reductions per input element
+            opnd = comp.shapes.get(inst.operands[0], "") if inst.operands \
+                else inst.result
+            cls = _dtype_class(opnd)
+            if base in ("reduce", "reduce-window"):
+                n = float(_shape_elems_bytes(opnd)[0])
+            else:
+                n = float(_shape_elems_bytes(inst.result)[0])
+        else:
+            cls = _dtype_class(inst.result)
+            n = float(_shape_elems_bytes(inst.result)[0])
+        key = f"{base}:{cls}"
+        total[key] = total.get(key, 0.0) + n
+    memo[comp.name] = total
+    return total
+
+
+def op_histogram(text: str) -> dict[str, float]:
+    """Executed-op histogram of a compiled module.
+
+    Keys are ``"{hlo_op}:{f|i}"`` (float vs integer/pred class); values are
+    executed output elements — except ``"dot:f"``, which carries FLOPs so
+    callers can convert contractions into fused multiply-add counts.  While
+    bodies are multiplied by their trip count, exactly like
+    `analyze_module`, so layer-scanned models report per-layer ops L times.
+    """
+    comps = parse_module(text)
+    return dict(_comp_hist(comps[_entry_name(text, comps)], comps, {}))
 
 
 # ---------------------------------------------------------------------------
@@ -378,10 +478,36 @@ def xla_cost_analysis(compiled) -> dict:
     property dicts; newer jax returns a single flat dict.  Callers always
     want one flat mapping — for a per-device list we take device 0 (SPMD
     programs are identical across devices).
+
+    Backends are allowed to ship without cost analysis (PJRT plugins often
+    stub it out, returning nothing or raising).  The workloads layer
+    (`repro.workloads`) builds instruction mixes on top of this call, so a
+    missing/empty analysis raises a `ValueError` naming the backend instead
+    of surfacing as a bare `KeyError`/`AttributeError`/`None` deep inside
+    the mix pipeline.
     """
-    ca = compiled.cost_analysis()
+    backend = getattr(compiled, "platform", None)
+    if backend is None:
+        try:
+            import jax
+            backend = jax.default_backend()
+        except Exception:  # noqa: BLE001 — name *something* in the error
+            backend = "<unknown>"
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # noqa: BLE001
+        raise ValueError(
+            f"Compiled.cost_analysis() is unavailable on backend "
+            f"{backend!r} ({type(e).__name__}: {e}) — this backend cannot "
+            f"drive HLO cost accounting (repro.analysis.hlo / "
+            f"repro.workloads)") from e
     if isinstance(ca, (list, tuple)):
         ca = ca[0] if ca else {}
+    if not ca:
+        raise ValueError(
+            f"Compiled.cost_analysis() returned no properties on backend "
+            f"{backend!r} — this backend cannot drive HLO cost accounting "
+            f"(repro.analysis.hlo / repro.workloads)")
     return dict(ca)
 
 

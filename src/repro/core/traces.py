@@ -263,15 +263,32 @@ def build_trace(name: str, length: int = 200_000, seed: int = 0) -> np.ndarray:
     """
     bench = BENCHES[name]
     mix = mix_of(name)
-    # crc32, not hash(): str hashing is PYTHONHASHSEED-randomised, and traces
-    # must be identical across processes (golden pins, PR-over-PR benchmarks)
-    rng = np.random.default_rng(zlib.crc32(f"{name}:{seed}".encode()))
+    return paint_trace(
+        mix.frac, length=length, seed_key=f"{name}:{seed}",
+        hot_f_groups=bench.hot_f_groups,
+        cold_event_period=bench.cold_event_period,
+        f_run_len=bench.f_run_len, sporadic=bench.sporadic)
 
-    sb_len = max(int(bench.cold_event_period), 24)
-    hot = [g for g in bench.hot_f_groups if mix.frac[isa.GROUP_ID[g]] > 0]
+
+def paint_trace(frac: np.ndarray, *, length: int, seed_key: str,
+                hot_f_groups: tuple = (), cold_event_period: int = 64,
+                f_run_len: int = 4, sporadic: bool = False) -> np.ndarray:
+    """Paint a (NUM_GROUPS,) stationary mix onto an instruction-id trace.
+
+    This is the loop-structure painter behind `build_trace`, exposed so
+    other mix sources (the model-zoo lowering in `repro.workloads`) share
+    the exact same process-deterministic contract: the numpy Generator is
+    seeded from ``crc32(seed_key)`` — crc32, not ``hash()``, because str
+    hashing is PYTHONHASHSEED-randomised and traces must be identical
+    across processes (golden pins, PR-over-PR benchmarks).
+    """
+    rng = np.random.default_rng(zlib.crc32(seed_key.encode()))
+
+    sb_len = max(int(cold_event_period), 24)
+    hot = [g for g in hot_f_groups if frac[isa.GROUP_ID[g]] > 0]
     cold = [g for g in isa.F_GROUPS
-            if g not in hot and mix.frac[isa.GROUP_ID[g]] > 0]
-    m_present = [g for g in isa.M_GROUPS if mix.frac[isa.GROUP_ID[g]] > 0]
+            if g not in hot and frac[isa.GROUP_ID[g]] > 0]
+    m_present = [g for g in isa.M_GROUPS if frac[isa.GROUP_ID[g]] > 0]
 
     member_cycler = {g: 0 for g in _GROUP_MEMBERS}
 
@@ -297,7 +314,7 @@ def build_trace(name: str, length: int = 200_000, seed: int = 0) -> np.ndarray:
         # both preserves the exact per-group mix and produces the paper's
         # spaced capacity-miss events
         for g in acc:
-            acc[g] += mix.frac[isa.GROUP_ID[g]] * sb_len
+            acc[g] += frac[isa.GROUP_ID[g]] * sb_len
         counts = {}
         for g in hot + m_present:
             counts[g] = int(acc[g])
@@ -305,7 +322,7 @@ def build_trace(name: str, length: int = 200_000, seed: int = 0) -> np.ndarray:
 
         # --- assemble op runs: hot-F bursts, index-mul singles, cold event ---
         items: list[list[int]] = []
-        run = max(1, bench.f_run_len)
+        run = max(1, f_run_len)
         hot_runs: list[list[int]] = []
         for g in hot:
             c = counts[g]
@@ -340,7 +357,7 @@ def build_trace(name: str, length: int = 200_000, seed: int = 0) -> np.ndarray:
         body_len = max(sb_len, n_ops + len(items) + 1)
         n_base = body_len - n_ops
         n_gaps = len(items) + 1
-        if bench.sporadic:
+        if sporadic:
             # ops cluster at the head; a long base tail separates clusters
             tail = int(n_base * 0.6)
             inner = n_base - tail

@@ -37,7 +37,6 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import isa, simulator
-from repro.core import traces as core_traces
 
 __all__ = [
     "PlacementConfig", "ContentionModel", "Placement",
@@ -87,10 +86,11 @@ class ContentionModel:
 
     `scenarios` maps benchmark name -> `SlotScenario` for tenants whose
     binaries slot different opcodes (per-tenant slot taxonomies); benches
-    absent from the mapping use the shared `scenario` default.  Benchmark
-    names are validated up front — an unknown profile raises a ValueError
-    naming the valid set instead of a KeyError from deep inside the trace
-    synthesizer.
+    absent from the mapping use the shared `scenario` default.  Tenant
+    names resolve through `repro.workloads.resolve_trace`: Embench bench
+    names and model-zoo "<arch>:<phase>" workloads are both valid, and an
+    unknown profile raises a ValueError naming both sets instead of a
+    KeyError from deep inside the trace synthesizer.
 
     `path` is handed to every underlying `sweep_fleet` call: the default
     "auto" serves solo references from the unpreempted stack-distance
@@ -122,12 +122,14 @@ class ContentionModel:
     # ------------------------------------------------------------------
     def trace(self, bench: str) -> np.ndarray:
         if bench not in self._traces:
-            if bench not in core_traces.BENCHES:
-                raise ValueError(
-                    f"unknown benchmark profile {bench!r} — valid names "
-                    f"are the Embench models in repro.core.traces.BENCHES: "
-                    f"{sorted(core_traces.BENCHES)}")
-            self._traces[bench] = core_traces.build_trace(
+            # repro.workloads.resolve_trace accepts Embench benches
+            # (bit-for-bit the core_traces stream) and model-zoo
+            # "<arch>:<phase>" workloads, and raises a ValueError naming
+            # both valid sets otherwise; imported lazily so pure-Embench
+            # placement never touches the model/configs stack
+            from repro import workloads
+
+            self._traces[bench] = workloads.resolve_trace(
                 bench, self.cfg.trace_len, seed=self.trace_seed)
         return self._traces[bench]
 

@@ -27,7 +27,6 @@ import numpy as np
 
 from repro.core import expert_slots as es
 from repro.core import isa, simulator
-from repro.core import traces as core_traces
 from repro.models import transformer
 
 
@@ -303,8 +302,9 @@ def estimate_fleet_contention(benches: list[str], *, num_slots: int = 4,
                               total_steps: int = 160_000) -> dict:
     """Multi-tenant slot-contention estimate from the core fleet simulator.
 
-    Maps each tenant to an instruction-mix profile (a benchmark name from
-    `repro.core.traces`) and runs the SAME `simulate_many` machinery that
+    Maps each tenant to an instruction-mix profile (an Embench name from
+    `repro.core.traces` or a model-zoo "<arch>:<phase>" workload from
+    `repro.workloads`) and runs the SAME `simulate_many` machinery that
     produces the paper's Fig. 7 numbers: one reconfigurable core, round-robin
     quantum, slot state persisting across switches.  Per tenant it reports
     the fleet CPI, the solo (unpreempted) CPI, and their ratio — the
@@ -323,7 +323,12 @@ def estimate_fleet_contention(benches: list[str], *, num_slots: int = 4,
     sched = simulator.SchedulerConfig(quantum_cycles=quantum_cycles,
                                       handler_cycles=handler_cycles,
                                       priorities=priorities)
-    tr = np.stack([core_traces.build_trace(n, trace_len) for n in benches])
+    # resolve_trace: Embench names pass through to core_traces bit-for-bit;
+    # "<arch>:<phase>" names lower the model zoo (lazy import keeps the
+    # serve layer importable without the model/configs stack)
+    from repro import workloads
+
+    tr = np.stack([workloads.resolve_trace(n, trace_len) for n in benches])
     # one-shot preempted fleet with a warm bitstream cache: the dispatcher
     # serves this from the interleave-aware stack-distance engine
     # (scheduler-window replay, bit-for-bit equal to the scan)

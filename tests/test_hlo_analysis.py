@@ -72,6 +72,41 @@ def test_memory_bytes_scale_with_scan():
     assert r8["bytes"] > 4 * r1["bytes"]
 
 
+class _FakeCompiled:
+    """Stand-in for jax's Compiled on backends with broken cost analysis."""
+
+    def __init__(self, ca, platform="fake-tpu"):
+        self._ca = ca
+        self.platform = platform
+
+    def cost_analysis(self):
+        if isinstance(self._ca, Exception):
+            raise self._ca
+        return self._ca
+
+
+def test_xla_cost_analysis_raising_backend_names_the_backend():
+    bad = _FakeCompiled(NotImplementedError("no cost model"),
+                        platform="neuron")
+    with pytest.raises(ValueError, match="neuron"):
+        hlo.xla_cost_analysis(bad)
+
+
+def test_xla_cost_analysis_empty_properties_names_the_backend():
+    for empty in (None, {}, [], [{}]):
+        with pytest.raises(ValueError, match="fake-tpu"):
+            hlo.xla_cost_analysis(_FakeCompiled(empty))
+
+
+def test_xla_cost_analysis_normalises_list_and_dict_forms():
+    # older jax returns a per-device list, newer a flat dict — callers get
+    # one dict either way
+    assert hlo.xla_cost_analysis(
+        _FakeCompiled([{"flops": 7.0}]))["flops"] == 7.0
+    assert hlo.xla_cost_analysis(
+        _FakeCompiled({"flops": 9.0}))["flops"] == 9.0
+
+
 def test_roofline_terms_dominance():
     t = hlo.roofline_terms(197e12, 0.0, 0.0)
     assert t["dominant"] == "compute" and t["compute_s"] == pytest.approx(1.0)

@@ -204,7 +204,9 @@ def test_replacer_validation(model):
     rep = OnlineReplacer(OCFG, model=model)
     with pytest.raises(ValueError, match="horizon"):
         rep.run([TenantEvent(9, "arrive", "a", "crc32")], 3)
-    with pytest.raises(ValueError, match="unknown benchmark"):
+    with pytest.raises(ValueError, match="unknown tenant name"):
+        # resolve_trace names both valid sets: Embench benches and
+        # model-zoo "<arch>:<phase>" workloads
         OnlineReplacer(OCFG, model=model).run(
             [TenantEvent(0, "arrive", "a", "nosuchbench")], 2)
 

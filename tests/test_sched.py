@@ -514,9 +514,11 @@ def test_contention_model_group_sweeps_ride_interleaved_engine(route_spy):
 # ---------------------------------------------------------------------------
 
 def test_contention_model_rejects_unknown_bench(model):
-    with pytest.raises(ValueError, match="unknown benchmark.*nosuch"):
+    # names resolve through repro.workloads.resolve_trace, whose error
+    # names both valid sets (Embench benches + "<arch>:<phase>" workloads)
+    with pytest.raises(ValueError, match="unknown tenant name.*nosuch"):
         model.predict([("nosuch", "minver")])
-    with pytest.raises(ValueError, match="unknown benchmark"):
+    with pytest.raises(ValueError, match="unknown tenant name"):
         model.solo_cpi("alsonosuch")
 
 

@@ -1,0 +1,231 @@
+"""Model-zoo workloads: HLO-derived mixes, deterministic trace lowering,
+registry resolution, and fast-path engine eligibility."""
+import os
+import subprocess
+import sys
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import workloads
+from repro.core import isa, simulator, traces as core_traces
+from repro.workloads.opcounts import OpCount, opcount_from_hlo
+
+# one small config exercised for real (compiles once per process; the
+# opcounts layer caches per (arch, phase))
+ARCH = "qwen1.5-4b"
+PRE = f"{ARCH}:prefill"
+DEC = f"{ARCH}:decode"
+
+
+# ---------------------------------------------------------------------------
+# OpCount accounting
+# ---------------------------------------------------------------------------
+
+
+def test_opcount_algebra_and_roundtrip():
+    a = OpCount({"fma": 100.0, "base": 50.0}, flops=200.0, bytes=40.0)
+    b = OpCount({"fadd": 10.0, "base": 10.0}, flops=10.0, bytes=8.0,
+                transcendental_elems=3.0)
+    s = a + b
+    assert s.counts == {"fma": 100.0, "base": 60.0, "fadd": 10.0}
+    assert s.flops == 210.0 and s.bytes == 48.0
+    assert s.transcendental_elems == 3.0
+    d = 2 * a
+    assert d.counts["fma"] == 200.0 and d.flops == 400.0
+    rt = OpCount.from_dict(s.to_dict())
+    assert rt.counts == s.counts and rt.flops == s.flops
+    frac = s.frac()
+    assert frac.shape == (isa.NUM_GROUPS,)
+    assert frac.sum() == pytest.approx(1.0)
+    assert frac[isa.GROUP_ID["fma"]] == pytest.approx(100 / 170)
+    with pytest.raises(ValueError):
+        OpCount({}).frac()
+
+
+def test_opcount_from_compiled_hlo_charges_expected_groups():
+    # dot -> fma, divide -> fdiv, exp -> transcendental expansion,
+    # bytes -> base; everything lands on the isa alphabet
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    txt = jax.jit(
+        lambda x, y: jnp.exp(x @ y) / y).lower(a, a).compile().as_text()
+    oc = opcount_from_hlo(txt)
+    fma = oc.counts.get("fma", 0.0)
+    assert fma >= 32 ** 3  # the dot's FLOPs/2 at minimum
+    assert oc.counts.get("fdiv", 0.0) > 0
+    assert oc.transcendental_elems >= 32 * 32
+    assert oc.counts.get("base", 0.0) > 0  # HBM-traffic proxy
+    assert set(oc.counts) <= set(isa.GROUP_NAMES)
+    assert oc.frac().sum() == pytest.approx(1.0)
+
+
+def test_op_histogram_applies_scan_trip_counts():
+    from repro.analysis import hlo
+
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def scanned(x, y):
+        def body(c, _):
+            return jax.lax.dot_general(
+                c, y, (((1,), (0,)), ((), ()))), None
+        return jax.lax.scan(body, x, None, length=8)[0]
+
+    txt = jax.jit(scanned).lower(a, a).compile().as_text()
+    hist = hlo.op_histogram(txt)
+    # dot entries carry FLOPs; the 8-trip scan body must count 8 times
+    assert hist["dot:f"] == pytest.approx(8 * 2 * 64 ** 3, rel=0.02)
+
+
+# ---------------------------------------------------------------------------
+# registry + resolution
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_cover_the_zoo_without_compiling():
+    names = workloads.list_workloads()
+    assert len(names) == 20  # 10 archs x 2 phases
+    assert PRE in names and DEC in names
+    assert all(workloads.is_workload_name(n) for n in names)
+    assert not workloads.is_workload_name("minver")
+    assert not workloads.is_workload_name("qwen1.5-4b:train")
+    assert not workloads.is_workload_name("no-such-model:prefill")
+
+
+def test_resolve_trace_embench_passthrough_is_bit_for_bit():
+    np.testing.assert_array_equal(
+        workloads.resolve_trace("minver", 9_000, seed=3),
+        core_traces.build_trace("minver", 9_000, seed=3))
+
+
+def test_resolve_trace_unknown_name_names_both_sets():
+    with pytest.raises(ValueError, match="minver"):
+        workloads.resolve_trace("not-a-tenant")
+    with pytest.raises(ValueError, match="prefill"):
+        workloads.resolve_trace("not-a-tenant")
+
+
+def test_contention_model_rejects_unknown_profile():
+    from repro.sched import ContentionModel, PlacementConfig
+
+    model = ContentionModel(PlacementConfig(trace_len=2_000))
+    with pytest.raises(ValueError, match="unknown"):
+        model.trace("qwen1.5-4b:finetune")
+
+
+# ---------------------------------------------------------------------------
+# lowered traces: fidelity, determinism, engine eligibility
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def specs():
+    return {p: workloads.get_workload(f"{ARCH}:{p}")
+            for p in ("prefill", "decode")}
+
+
+def test_lowered_traces_match_their_mix_table(specs):
+    for spec in specs.values():
+        tr = spec.build_trace(40_000)
+        emp = core_traces.trace_mix(tr)
+        np.testing.assert_allclose(emp, spec.mix(), atol=0.01)
+        # alphabet stays the isa one (29 tags < bs_cache_entries=64, so
+        # warm-cache engine eligibility is preserved by construction)
+        assert tr.dtype == np.int32
+        assert tr.min() >= 0 and tr.max() < isa.NUM_INSTRUCTIONS
+
+
+def test_phases_lower_asymmetrically(specs):
+    pre, dec = specs["prefill"].mix(), specs["decode"].mix()
+    base = isa.GROUP_ID["base"]
+    f_ids = [isa.GROUP_ID[g] for g in isa.F_GROUPS]
+    # prefill is F-hot/slot-hungry; decode is memory-bound/base-heavy
+    assert pre[base] < dec[base]
+    assert pre[f_ids].sum() > dec[f_ids].sum()
+    assert specs["prefill"].f_run_len > specs["decode"].f_run_len
+    assert specs["decode"].sporadic and not specs["prefill"].sporadic
+
+
+def test_traces_are_deterministic_across_processes(specs):
+    """Two fresh processes with different PYTHONHASHSEEDs must lower the
+    exact same trace (crc32-seeded painter, not str-hash-seeded)."""
+    in_proc = zlib.crc32(specs["decode"].build_trace(6_000).tobytes())
+    prog = ("import zlib; from repro import workloads; "
+            f"print(zlib.crc32(workloads.build_trace("
+            f"{DEC!r}, 6_000).tobytes()))")
+    crcs = []
+    for hashseed in ("0", "1"):
+        src = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(workloads.__file__))))
+        env = dict(os.environ, PYTHONPATH=src, JAX_PLATFORMS="cpu",
+                   PYTHONHASHSEED=hashseed)
+        out = subprocess.run(
+            [sys.executable, "-c", prog], capture_output=True, text=True,
+            check=True, env=env)
+        crcs.append(int(out.stdout.strip()))
+    assert crcs[0] == crcs[1] == in_proc
+
+
+def test_workload_fleet_rides_fast_paths(route_spy, monkeypatch, specs):
+    """A model-zoo fleet through the ContentionModel must dispatch to the
+    stackdist/interleaved engines only — zero scan-fallback calls."""
+    from repro.sched import ContentionModel, PlacementConfig
+
+    scan_calls = []
+    real = simulator._sweep_fleet
+    monkeypatch.setattr(
+        simulator, "_sweep_fleet",
+        lambda *a, **kw: (scan_calls.append(a) or real(*a, **kw)))
+
+    cfg = PlacementConfig(quantum_cycles=2_000, trace_len=3_000,
+                          steps_per_program=4_000)
+    model = ContentionModel(cfg)
+    groups = [(PRE, DEC), (DEC, DEC)]
+    preds = model.predict(groups)
+    assert route_spy, "group sweep did not hit the interleaved engine"
+    assert not scan_calls, "model-zoo fleet fell back to the scan engine"
+    assert all(np.all(p >= 1.0 - 1e-9) for p in preds)
+
+
+def test_serve_engine_contention_accepts_workload_names(specs):
+    from repro.serve.engine import estimate_fleet_contention
+
+    est = estimate_fleet_contention(
+        [PRE, DEC], trace_len=4_000, total_steps=12_000)
+    assert set(est["tenants"]) == {f"0:{PRE}", f"1:{DEC}"}
+    for t in est["tenants"].values():
+        assert t["fleet_cpi"] > 0 and t["solo_cpi"] > 0
+        assert t["contention_slowdown"] > 0
+
+
+# ---------------------------------------------------------------------------
+# benchmark harness wiring
+# ---------------------------------------------------------------------------
+
+
+def test_benchmark_registration_audit_passes_and_detects_orphans(
+        monkeypatch):
+    from benchmarks import run as bench_run
+
+    bench_run.audit_registration()  # current state must be clean
+    # an unmapped module (neither registered nor excluded) must trip it
+    monkeypatch.setitem(bench_run.EXCLUDED, "perf_gate", None)
+    monkeypatch.delitem(bench_run.EXCLUDED, "perf_gate")
+    with pytest.raises(AssertionError, match="perf_gate"):
+        bench_run.audit_registration()
+
+
+def test_mix_table_rows_serialize_round_trippable_fractions(specs):
+    # restrict to the already-compiled arch cells to keep the test light;
+    # the full-zoo CSV is written by benchmarks/model_serve_study.py
+    header, rows = workloads.mix_table_rows([PRE, DEC])
+    assert header[:3] == ["workload", "arch", "phase"]
+    assert header[6:] == [f"frac_{g}" for g in isa.GROUP_NAMES]
+    assert [r[0] for r in rows] == [PRE, DEC]
+    for r in rows:
+        assert len(r) == len(header)
+        fracs = [float(x) for x in r[6:]]
+        assert sum(fracs) == pytest.approx(1.0, abs=1e-4)
+        assert float(r[3]) > 0 and float(r[4]) > 0  # flops, bytes
