@@ -16,7 +16,10 @@ CI re-runs the smoke from the PR's base ref in a worktree (see
 `--modules` restricts the gate to entries actually re-benchmarked on both
 sides (BENCH_fleet.json merges partial runs, so other entries are stale
 carry-overs).  Modules below `--min-us` are skipped (timer noise), as are
-modules present on only one side (new or retired benchmarks).
+modules present on only one side (new or retired benchmarks) and modules
+whose two sides were recorded on different backends (entries carry
+{backend, device, platform_version} provenance since PR 9 — a CPU
+baseline must never gate a GPU run).
 
 Exit code 0 = within budget, 1 = regression (CI fails the step).
 """
@@ -49,6 +52,14 @@ def compare(baseline: dict, current: dict, *, max_slowdown: float,
                 f"none of the allowlisted modules {sorted(set(modules))} "
                 f"exist on both sides — gate is vacuous")
     for name in shared:
+        base_be = baseline[name].get("backend")
+        cur_be = current[name].get("backend")
+        if base_be and cur_be and base_be != cur_be:
+            # cross-backend wall-clock is not comparable; entries without
+            # provenance (pre-PR-9 baselines) keep the old behaviour
+            rows.append(f"{name}: skipped (baseline backend {base_be} != "
+                        f"current {cur_be})")
+            continue
         base_us = float(baseline[name].get("us_per_call", 0))
         cur_us = float(current[name].get("us_per_call", 0))
         if base_us < min_us or cur_us <= 0:

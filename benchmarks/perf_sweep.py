@@ -35,12 +35,25 @@ interleaved fast path, measured head-to-head.
    from the materialised `FleetState` on both engines — the shape of
    every online-serving epoch advance and migration probe.
 
+6. **Fused window-distance kernel vs the jnp window pass** (PR 9): the
+   `window_kernel` section, delegated to `benchmarks/window_kernel.py` —
+   one-shot sweep + resumed segment through `use_kernel="kernel"`
+   (compiled Pallas on GPU/TPU, interpret mode on CPU, recorded as
+   `kernel_mode` so the regimes are never conflated).
+
 Emits machine-readable `BENCH_sweep.json` at the repo root so the perf
 trajectory is tracked PR-over-PR, and a CSV under experiments/bench via
-benchmarks.run.
+benchmarks.run.  The JSON is keyed per backend (``{"cpu": {...sections,
+meta}, "gpu": {...}}``): a run replaces its own backend's section and
+preserves the others, and every section's meta carries {backend, device,
+platform_version}.  Standalone flags::
+
+    PYTHONPATH=src python -m benchmarks.perf_sweep [--backend gpu]
+    PYTHONPATH=src python -m benchmarks.perf_sweep [--interpret]
 """
 from __future__ import annotations
 
+import argparse
 import functools
 import json
 import os
@@ -51,7 +64,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.run import _backend_meta
 from repro.core import isa, scheduler, simulator, slots, traces
+from repro.kernels import window_distance
 
 FIG6_TRACE_LEN = 120_000          # matches benchmarks/fig6_single.py
 FIG6_LATENCIES = (10, 50, 250)
@@ -247,8 +262,10 @@ PG_SLOT_COUNTS = (2, 4, 8)
 PG_LATENCIES = (10, 50, 250)
 PG_PROGRAMS = (2, 3, 4)
 # always include the live default so retuning INTERLEAVE_WINDOW keeps the
-# sweep (and the interleaved_s lookup below) well-defined
-PG_WINDOWS = tuple(sorted({256, 1024, simulator.INTERLEAVE_WINDOW}))
+# sweep (and the interleaved_s lookup below) well-defined; 256/512/1024
+# stay fixed so the recorded sweep is comparable across backends whose
+# defaults differ (cpu retuned to 256 in PR 9, accelerators keep 512)
+PG_WINDOWS = tuple(sorted({256, 512, 1024, simulator.INTERLEAVE_WINDOW}))
 
 
 def bench_preempted_grid() -> dict:
@@ -376,22 +393,40 @@ def bench_resumed_segment() -> dict:
 # ---------------------------------------------------------------------------
 
 
+def _merge_per_backend(report: dict) -> dict:
+    """BENCH_sweep.json is keyed per backend: this run replaces its own
+    backend's section and preserves the others (a legacy flat layout —
+    sections at the top level — is migrated under its meta backend)."""
+    existing: dict = {}
+    if os.path.exists(SWEEP_JSON):
+        try:
+            with open(SWEEP_JSON) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = {}
+    if "meta" in existing:            # legacy single-backend flat layout
+        existing = {existing["meta"].get("backend", "cpu"): existing}
+    existing[report["meta"]["backend"]] = report
+    return existing
+
+
 def run() -> tuple[list[str], dict]:
+    from benchmarks import window_kernel
     report = {
         "fig6_grid": bench_fig6_grid(),
         "p4_preempted": bench_p4_preempted(),
         "preempted_grid": bench_preempted_grid(),
         "cold_bitstream": bench_cold_bitstream(),
         "resumed_segment": bench_resumed_segment(),
+        "window_kernel": window_kernel.bench_kernel_vs_jnp(),
         "meta": {
-            "backend": jax.default_backend(),
-            "device": str(jax.devices()[0]),
+            **_backend_meta(),
             "machine": platform.machine(),
             "reps": REPS,
         },
     }
     with open(SWEEP_JSON, "w") as f:
-        json.dump(report, f, indent=2)
+        json.dump(_merge_per_backend(report), f, indent=2)
     g, p = report["fig6_grid"], report["p4_preempted"]
     pg = report["preempted_grid"]
     rows = [
@@ -413,6 +448,7 @@ def run() -> tuple[list[str], dict]:
         rows += [f"preempted_grid_{key},window={w},{s:.3f},-"
                  for w, s in e["window_sweep_s"].items()]
     cb, rs = report["cold_bitstream"], report["resumed_segment"]
+    wk = report["window_kernel"]
     rows += [
         f"cold_bitstream,scan,{cb['scan_s']:.3f},1.00x",
         f"cold_bitstream,stackdist_cold,{cb['stackdist_cold_s']:.3f},"
@@ -420,6 +456,9 @@ def run() -> tuple[list[str], dict]:
         f"resumed_segment,scan,{rs['scan_s']:.3f},1.00x",
         f"resumed_segment,interleaved,{rs['interleaved_resume_s']:.3f},"
         f"{rs['speedup']:.1f}x",
+        f"window_kernel,jnp,{wk['jnp_s']:.3f},1.00x",
+        f"window_kernel,kernel[{wk['kernel_mode']}],{wk['kernel_s']:.3f},"
+        f"{wk['speedup']:.2f}x",
     ]
     worst = min(e["speedup"] for e in pg.values())
     rows.append(f"# fast path {g['speedup']:.1f}x on the fig6 grid; "
@@ -427,12 +466,31 @@ def run() -> tuple[list[str], dict]:
                 f"fleet; interleaved >= {worst:.1f}x on the preempted "
                 f"fig6-style grids; stacked cold-bitstream "
                 f"{cb['speedup']:.1f}x on the bitstream_study grid; "
-                f"resumed segments {rs['speedup']:.1f}x; "
-                "BENCH_sweep.json written")
+                f"resumed segments {rs['speedup']:.1f}x; window kernel "
+                f"[{wk['kernel_mode']}] {wk['speedup']:.2f}x vs jnp; "
+                "BENCH_sweep.json written "
+                f"[{report['meta']['backend']}]")
     return rows, report
 
 
-def main(print_fn=print):
+def main(print_fn=print, argv=None):
+    ap = argparse.ArgumentParser(description="sweep-engine wall-clock")
+    ap.add_argument("--backend", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="select the jax backend before any computation "
+                         "runs (the recorded section is keyed by it)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="force the window-distance kernel parity path "
+                         "(use_kernel session default -> 'interpret')")
+    args = ap.parse_args(argv if argv is not None else [])
+    if args.backend:
+        # jax is imported but no backend is initialised until the first
+        # computation, so the platform choice still lands
+        os.environ["JAX_PLATFORMS"] = args.backend
+        jax.config.update("jax_platforms", args.backend)
+    if args.interpret:
+        os.environ["REPRO_WINDOW_KERNEL"] = "interpret"
+        window_distance.set_default_mode("interpret")
     t0 = time.time()
     rows, _ = run()
     for r in rows:
@@ -441,4 +499,6 @@ def main(print_fn=print):
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(argv=sys.argv[1:])
+

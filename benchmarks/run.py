@@ -9,6 +9,12 @@ runs (``--only``) merge into the existing JSON instead of clobbering it.
     PYTHONPATH=src python -m benchmarks.run [--only fig6]
     PYTHONPATH=src python -m benchmarks.run [--only fig6,placement_search]
     PYTHONPATH=src python -m benchmarks.run --list   # names --only matches
+    PYTHONPATH=src python -m benchmarks.run --backend gpu   # JAX_PLATFORMS
+    PYTHONPATH=src python -m benchmarks.run --interpret     # kernel parity
+
+Every recorded entry carries {backend, device, platform_version}
+provenance so numbers from different backends are never conflated (the
+perf gate only compares same-backend entries).
 """
 from __future__ import annotations
 
@@ -22,6 +28,18 @@ import time
 FLEET_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_fleet.json")
+
+
+def _backend_meta() -> dict:
+    """{backend, device, platform_version} provenance stamped into every
+    recorded entry.  Imports jax lazily so `--backend` can set
+    JAX_PLATFORMS before the backend is chosen; CPU devices carry no
+    platform_version attribute, so the jax version stands in."""
+    import jax
+    dev = jax.devices()[0]
+    version = getattr(dev, "platform_version", "") or f"jax-{jax.__version__}"
+    return {"backend": jax.default_backend(), "device": str(dev),
+            "platform_version": " ".join(str(version).split())}
 
 
 def _capture(mod_main):
@@ -140,6 +158,14 @@ def bench_model_serve_study():
     return lines, head[2:]
 
 
+def bench_window_kernel():
+    """Fused window-distance kernel vs the jnp window pass (parity first)."""
+    from benchmarks import window_kernel
+    lines, _ = window_kernel.run()
+    head = [l for l in lines if l.startswith("# finding")][0]
+    return lines, head[2:]
+
+
 BENCHES = {
     "fig4_extensions": bench_fig4,
     "fig5_classification": bench_fig5,
@@ -156,6 +182,7 @@ BENCHES = {
     "online_churn": bench_online_churn,
     "chaos_serve": bench_chaos_serve,
     "model_serve_study": bench_model_serve_study,
+    "window_kernel": bench_window_kernel,
 }
 
 # registration audit: every benchmark module in this directory must either
@@ -178,6 +205,7 @@ MODULE_OF = {
     "online_churn": "online_churn",
     "chaos_serve": "chaos_serve",
     "model_serve_study": "model_serve_study",
+    "window_kernel": "window_kernel",
 }
 EXCLUDED = {
     "run": "the harness itself",
@@ -228,11 +256,26 @@ def main(argv=None) -> None:
                     help="print the registered module names (the values "
                          "--only matches against) and exit")
     ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--backend", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="set JAX_PLATFORMS before any benchmark imports "
+                         "jax (entries are stamped with the backend that "
+                         "actually ran)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="force the window-distance kernel parity path "
+                         "(REPRO_WINDOW_KERNEL=interpret) — a correctness "
+                         "vehicle, not a fast path")
     args = ap.parse_args(argv)
     if args.list:
         for name in BENCHES:
             print(name)
         return
+    # env, not jax.config: benchmark modules import jax lazily inside the
+    # bench functions, so nothing has initialised a backend yet
+    if args.backend:
+        os.environ["JAX_PLATFORMS"] = args.backend
+    if args.interpret:
+        os.environ["REPRO_WINDOW_KERNEL"] = "interpret"
     only = [s for s in (args.only or "").split(",") if s]
     # a substring matching nothing is a typo, not an empty run: silently
     # running zero modules and exiting 0 once masked a dead perf gate
@@ -253,7 +296,8 @@ def main(argv=None) -> None:
         with open(os.path.join(args.out, f"{name}.csv"), "w") as f:
             f.write("\n".join(lines) + "\n")
         derived = str(derived).replace(",", ";")
-        results[name] = {"us_per_call": round(us), "derived": derived}
+        results[name] = {"us_per_call": round(us), "derived": derived,
+                         **_backend_meta()}
         print(f"{name},{us:.0f},{derived}", flush=True)
     if results:
         _record_fleet_json(results)

@@ -100,6 +100,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import (isa, slots, stackdist, stackdist_cold,
                         stackdist_interleaved)
 from repro.core.traces import Mix, analytic_cpi  # re-export for callers
@@ -127,11 +128,19 @@ SCAN_UNROLL = 1
 # default scheduler-window size of the interleaved fast path — a pure
 # performance knob (a quantum larger than the window spans several
 # iterations via the carried quantum-cycle counter; results are identical
-# for any window >= 1).  Tuned on CPU: 256-1024 are within noise of each
-# other on both the fig6-style preempted grid and the ContentionModel
-# batch shape; smaller windows waste iterations, larger ones waste memory
-# bandwidth on accesses past the next switch.
-INTERLEAVE_WINDOW = 512
+# for any window >= 1).  Backend-aware: the recorded window sweep
+# (BENCH_sweep.json, preempted_grid.*.window_sweep_s) shows 256 beating
+# 512 on every CPU preempted grid (P=2..4), so CPU defaults to 256;
+# accelerators keep 512 — wider windows amortise kernel dispatch and the
+# per-iteration gather there, and no recorded sweep argues for less.
+_INTERLEAVE_WINDOW_BY_BACKEND = {"cpu": 256}
+
+
+def _default_interleave_window() -> int:
+    return _INTERLEAVE_WINDOW_BY_BACKEND.get(jax.default_backend(), 512)
+
+
+INTERLEAVE_WINDOW = _default_interleave_window()
 
 
 @dataclass(frozen=True)
@@ -968,7 +977,8 @@ def _engine_num_tags(table: np.ndarray, state: FleetState | None) -> int:
 
 def _resume_fleet_interleaved(traces, table, cfg: ReconfigConfig, quanta,
                               schedule, handler, seed_state: FleetState,
-                              total_steps: int, num_tags: int):
+                              total_steps: int, num_tags: int,
+                              use_kernel=None):
     """Run one resumable interleaved cell from a `FleetState` seed ->
     (FleetResult, final CellCarry)."""
     w = _interleaved_window(quanta, total_steps, None)
@@ -978,7 +988,8 @@ def _resume_fleet_interleaved(traces, table, cfg: ReconfigConfig, quanta,
         jnp.asarray(quanta, jnp.int32), jnp.asarray(schedule, jnp.int32),
         jnp.int32(handler), jnp.int32(cfg.bs_miss_extra),
         _seed_carry(seed_state, num_tags),
-        num_tags=num_tags, total_steps=total_steps, window=w)
+        num_tags=num_tags, total_steps=total_steps, window=w,
+        use_kernel=use_kernel)
     res = FleetResult(final.cycles, final.instrs, final.misses,
                       final.bs_misses, final.switches)
     return res, final
@@ -1087,7 +1098,8 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                   state: FleetState | None = None,
                   return_state: bool = False,
                   num_active: int | None = None,
-                  path: str = "auto"):
+                  path: str = "auto",
+                  use_kernel=None):
     """Round-robin fleet of P programs sharing one reconfigurable core.
 
     traces: (P, N) int32 instruction ids; `scenarios` is one shared
@@ -1114,7 +1126,10 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
     are canonicalised too (`_canonical_state` — behaviour-preserving, so
     resumes and state comparisons never see which engine ran).
     `path="scan"|"interleaved"` forces an engine ("interleaved" raises
-    on ineligible or unseedable runs).
+    on ineligible or unseedable runs); `use_kernel` picks the
+    interleaved engine's window-pass implementation (jnp body or the
+    fused Pallas kernel — `repro.kernels.window_distance.resolve`),
+    bit-for-bit identical either way.
 
     `num_active` masks the disambiguator down to its first `num_active`
     slots (a degraded core that came back with fewer usable slots —
@@ -1188,7 +1203,7 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                 jnp.asarray([cfg.miss_latency], jnp.int32),
                 jnp.asarray([cfg.num_slots], jnp.int32), quanta[None, :],
                 schedule, sched.handler_cycles, cfg.bs_miss_extra,
-                total_steps, None)
+                total_steps, None, use_kernel)
             return FleetResult(*(x[0, 0, 0, 0] for x in res))
     else:
         # state-carrying: seed the resumable engine from the given state
@@ -1215,7 +1230,7 @@ def simulate_many(traces: np.ndarray, cfg: ReconfigConfig,
                     quanta[None, :], 1, num_tags, total_steps, None)):
             res, final = _resume_fleet_interleaved(
                 traces, table, cfg, quanta, schedule, sched.handler_cycles,
-                seed_state, total_steps, num_tags)
+                seed_state, total_steps, num_tags, use_kernel)
             if not return_state:
                 return res
             return res, _state_from_final(final, seed_state, cfg.num_slots,
@@ -1333,10 +1348,44 @@ def _sweep_fleet_stackdist_cold(fleets, table, lats, counts, bs_entries,
     )
 
 
+def _fleet_mesh():
+    """1-D device mesh over the fleet axis, or None on single-device
+    hosts (the mesh path must be a no-op there: every BENCH anchor is
+    recorded single-device and stays byte-identical)."""
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return None
+    return jax.sharding.Mesh(np.array(devs), ("fleet",))
+
+
+def _mesh_sweep_preempted(mesh, part, table, counts, lats, quanta_grid,
+                          schedule, handler, bs_miss_extra, num_tags: int,
+                          total_steps: int, w: int, use_kernel):
+    """Shard one padded fleet chunk across the device mesh: each device
+    runs the interleaved sweep (jnp or Pallas-kernel window pass alike)
+    over its fleet shard; grid/scalar operands replicate via closure.
+    Results concatenate along the fleet axis, so this is bit-identical
+    to the single-device call on the same chunk."""
+    spec = jax.sharding.PartitionSpec
+
+    def shard(pt):
+        return stackdist_interleaved.sweep_preempted(
+            pt, table, isa.INSTR_HW_CYCLES, counts, lats,
+            jnp.asarray(quanta_grid, jnp.int32),
+            jnp.asarray(schedule, jnp.int32), jnp.int32(handler),
+            jnp.int32(bs_miss_extra), num_tags=num_tags,
+            total_steps=total_steps, window=w, use_kernel=use_kernel)
+
+    out_specs = stackdist_interleaved.InterleavedGrid(
+        *([spec(None, "fleet")] * 5))
+    return compat.shard_map(shard, mesh=mesh, in_specs=(spec("fleet"),),
+                            out_specs=out_specs, check_rep=False)(part)
+
+
 def _sweep_fleet_interleaved(fleets, table, lats, counts, quanta_grid,
                              schedule, handler, bs_miss_extra,
-                             total_steps: int,
-                             window: int | None) -> FleetResult:
+                             total_steps: int, window: int | None,
+                             use_kernel=None) -> FleetResult:
     """Serve the full (Q, B, K, L) grid from the interleave-aware engine.
 
     Each cell replays its own switch points (they are cost-dependent), so
@@ -1346,13 +1395,21 @@ def _sweep_fleet_interleaved(fleets, table, lats, counts, quanta_grid,
     size so repeat callers with varying batch sizes (the contention
     model's candidate sweeps price groups in batches of 1..8) hit one
     compiled shape instead of one per batch size — compiling this sweep
-    costs seconds, replaying a few padded cells costs milliseconds.
+    costs seconds, replaying a few padded cells costs milliseconds.  On
+    multi-device hosts each chunk's fleet axis additionally shards
+    across a 1-D device mesh (`compat.shard_map`) — cells are
+    independent, so sharding the batch is exact; padding rounds up to
+    the device count and padded rows are sliced off as before.
+    `use_kernel` picks the window-pass implementation
+    (`repro.kernels.window_distance.resolve`).
     """
     num_tags = max(int(np.max(np.asarray(table))) + 1, 1)
     w = _interleaved_window(quanta_grid, total_steps, window)
     cells = quanta_grid.shape[0] * counts.shape[0] * lats.shape[0]
     chunk = max(1, _INTERLEAVED_CHUNK_ELEMS // max(w * num_tags * cells, 1))
     b_total = fleets.shape[0]
+    mesh = _fleet_mesh()
+    ndev = mesh.devices.size if mesh is not None else 1
     grids = []
     for i in range(0, b_total, chunk):
         part = jnp.asarray(fleets[i:i + chunk])
@@ -1361,17 +1418,24 @@ def _sweep_fleet_interleaved(fleets, table, lats, counts, quanta_grid,
         else:
             target = min(-(-b_total // _INTERLEAVED_BATCH_BUCKET)
                          * _INTERLEAVED_BATCH_BUCKET, chunk)
+        target = -(-target // ndev) * ndev   # mesh: divisible fleet shards
         pad = target - part.shape[0]
         if pad > 0:
             part = jnp.concatenate(
                 [part, jnp.broadcast_to(part[:1],
                                         (pad,) + part.shape[1:])], axis=0)
-        grids.append(stackdist_interleaved.sweep_preempted(
-            part, table, isa.INSTR_HW_CYCLES, counts, lats,
-            jnp.asarray(quanta_grid, jnp.int32),
-            jnp.asarray(schedule, jnp.int32), jnp.int32(handler),
-            jnp.int32(bs_miss_extra), num_tags=num_tags,
-            total_steps=total_steps, window=w))
+        if mesh is not None:
+            grids.append(_mesh_sweep_preempted(
+                mesh, part, table, counts, lats, quanta_grid, schedule,
+                handler, bs_miss_extra, num_tags, total_steps, w,
+                use_kernel))
+        else:
+            grids.append(stackdist_interleaved.sweep_preempted(
+                part, table, isa.INSTR_HW_CYCLES, counts, lats,
+                jnp.asarray(quanta_grid, jnp.int32),
+                jnp.asarray(schedule, jnp.int32), jnp.int32(handler),
+                jnp.int32(bs_miss_extra), num_tags=num_tags,
+                total_steps=total_steps, window=w, use_kernel=use_kernel))
     return FleetResult(*(jnp.concatenate([g[f] for g in grids],
                                          axis=1)[:, :b_total]
                          for f in range(5)))
@@ -1382,7 +1446,8 @@ def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
                 bs_cache_entries: int = 64, bs_miss_extra: int = 100,
                 total_steps: int = 400_000, path: str = "auto",
                 scan_unroll: int = SCAN_UNROLL,
-                interleave_window: int | None = None) -> FleetResult:
+                interleave_window: int | None = None,
+                use_kernel=None) -> FleetResult:
     """One call over the {quanta x fleets x slot counts x miss latencies}
     grid.
 
@@ -1402,8 +1467,10 @@ def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
     the scan; preempted or mixed grids with a fleet-warm bitstream cache
     (`interleaved_eligible`) replay every cell's own interleaving at
     scheduler-window granularity (`repro.core.stackdist_interleaved`;
-    `interleave_window` overrides the tuned window size, results
-    identical for any value); everything else — now only preempted runs
+    `interleave_window` overrides the tuned backend-aware window size and
+    `use_kernel` the window-pass implementation — jnp body or fused
+    Pallas kernel, see `repro.kernels.window_distance.resolve` — results
+    identical for any value of either); everything else — now only preempted runs
     with cold bitstream caches — runs the jitted vmap^4 of `lax.scan`s,
     where slot counts sweep by masking one max-size disambiguator
     (`slots.lookup`'s `num_active`).  `path` forces a specific engine
@@ -1469,7 +1536,7 @@ def sweep_fleet(fleets: np.ndarray, miss_latencies, scenarios,
         res = _sweep_fleet_interleaved(
             fleets, table, lats, counts, quanta_grid,
             sched.schedule(num_progs), sched.handler_cycles, bs_miss_extra,
-            total_steps, interleave_window)
+            total_steps, interleave_window, use_kernel)
         if quanta is None:
             return FleetResult(*(x[0] for x in res))
         return res

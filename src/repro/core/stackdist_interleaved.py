@@ -82,6 +82,19 @@ parameter: a quantum larger than the window simply spans several
 iterations via the carried quantum-cycle counter.  Like its sibling,
 this module is deliberately generic — it knows nothing about the RISC-V
 alphabet; callers pass the per-opcode tag and cost tables.
+
+**Kernel dispatch** (`use_kernel`): both entry points accept a knob that
+routes the window pass through the fused Pallas kernel
+(`repro.kernels.window_distance`) instead of the jnp body above — the
+whole per-cell loop runs on-chip with the per-tag `last_pos` vector
+resident in VMEM/registers and the (W, num_tags) occurrence matrices
+never materialised in HBM.  `None` defers to the session default
+(`window_distance.resolve`: compiled Pallas on GPU/TPU, the jnp body on
+CPU); `'kernel'`/True forces the kernel (interpret mode off-accelerator);
+`'interpret'` forces `pl.pallas_call(..., interpret=True)` — the CPU
+parity path CI proves bit-for-bit; `'jnp'`/False forces the always-
+available jnp fallback.  Every mode returns bit-identical results
+(tests/test_window_kernel.py).
 """
 from __future__ import annotations
 
@@ -90,6 +103,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import window_distance
 
 __all__ = ["CellCarry", "InterleavedGrid", "resume_preempted",
            "sweep_preempted"]
@@ -252,22 +267,26 @@ def _simulate_cell(ptags, pcosts, num_active, miss_latency, quanta,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("num_tags", "total_steps", "window"))
-def resume_preempted(fleet: jnp.ndarray, tag_table: jnp.ndarray,
-                     instr_costs: jnp.ndarray, num_active, miss_latency,
-                     quanta: jnp.ndarray, schedule: jnp.ndarray, handler,
-                     bs_miss_extra, seed: CellCarry, *, num_tags: int,
-                     total_steps: int, window: int) -> CellCarry:
-    """One resumable cell: (P, N) traces + engine-coordinate seed ->
-    final `CellCarry` (cumulative counters plus the per-tag occurrence
-    vectors `repro.core.simulator._state_from_final` turns back into a
-    `FleetState`).  The seed is built by `simulator._seed_carry`; its
-    `last_miss_pos`/`steps_done` fields are ignored (reset to -1/0)."""
+                   static_argnames=("num_tags", "total_steps", "window",
+                                    "kernel", "interpret"))
+def _resume_impl(fleet, tag_table, instr_costs, num_active, miss_latency,
+                 quanta, schedule, handler, bs_miss_extra,
+                 seed: CellCarry, *, num_tags: int, total_steps: int,
+                 window: int, kernel: bool, interpret: bool) -> CellCarry:
     table = jnp.asarray(tag_table, jnp.int32)
     costs = jnp.asarray(instr_costs, jnp.int32)
     fleet = jnp.asarray(fleet, jnp.int32)
     ptags = jnp.take_along_axis(table, fleet, axis=1)
     pcosts = costs[fleet]
+    if kernel:
+        kseed = (seed.last_pos, seed.cursors, seed.sched_idx,
+                 seed.q_cycles, seed.cycles, seed.instrs, seed.misses,
+                 seed.bs_misses, seed.switches)
+        return CellCarry(*window_distance.window_cell(
+            ptags, pcosts, num_active, miss_latency, quanta, schedule,
+            handler, bs_miss_extra, seed=kseed, num_tags=num_tags,
+            total_steps=total_steps, window=window, materialise=True,
+            interpret=interpret))
     return _simulate_cell(ptags, pcosts,
                           jnp.asarray(num_active, jnp.int32),
                           jnp.asarray(miss_latency, jnp.int32),
@@ -279,25 +298,34 @@ def resume_preempted(fleet: jnp.ndarray, tag_table: jnp.ndarray,
                           seed=seed, materialise=True)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("num_tags", "total_steps", "window"))
-def sweep_preempted(fleets: jnp.ndarray, tag_table: jnp.ndarray,
-                    instr_costs: jnp.ndarray, slot_counts: jnp.ndarray,
-                    miss_latencies: jnp.ndarray, quanta: jnp.ndarray,
-                    schedule: jnp.ndarray, handler, bs_miss_extra, *,
-                    num_tags: int, total_steps: int,
-                    window: int) -> InterleavedGrid:
-    """Preempted-fleet sweep: (B, P, N) traces -> InterleavedGrid.
+def resume_preempted(fleet: jnp.ndarray, tag_table: jnp.ndarray,
+                     instr_costs: jnp.ndarray, num_active, miss_latency,
+                     quanta: jnp.ndarray, schedule: jnp.ndarray, handler,
+                     bs_miss_extra, seed: CellCarry, *, num_tags: int,
+                     total_steps: int, window: int,
+                     use_kernel=None) -> CellCarry:
+    """One resumable cell: (P, N) traces + engine-coordinate seed ->
+    final `CellCarry` (cumulative counters plus the per-tag occurrence
+    vectors `repro.core.simulator._state_from_final` turns back into a
+    `FleetState`).  The seed is built by `simulator._seed_carry`; its
+    `last_miss_pos`/`steps_done` fields are ignored (reset to -1/0).
+    `use_kernel` picks the window-pass implementation (module
+    docstring); every mode is bit-for-bit identical."""
+    kernel, interpret = window_distance.resolve(use_kernel)
+    return _resume_impl(fleet, tag_table, instr_costs, num_active,
+                        miss_latency, quanta, schedule, handler,
+                        bs_miss_extra, seed, num_tags=num_tags,
+                        total_steps=total_steps, window=window,
+                        kernel=kernel, interpret=interpret)
 
-    `tag_table` is the (P, num_opcodes) per-program instr->tag table,
-    `instr_costs` the shared (num_opcodes,) hw-cycle table, `quanta` the
-    (Q, P) swept per-program quantum grid, `schedule` the weighted
-    round-robin turn order.  Every {quantum x fleet x slot count x miss
-    latency} cell runs its own interleaving (the switch points are
-    cost-dependent, see module docstring); cells are independent, so the
-    grid is a vmap^4 over one cell engine, axis order matching the
-    scan's `simulator._sweep_fleet`.
-    """
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_tags", "total_steps", "window",
+                                    "kernel", "interpret"))
+def _sweep_impl(fleets, tag_table, instr_costs, slot_counts,
+                miss_latencies, quanta, schedule, handler, bs_miss_extra,
+                *, num_tags: int, total_steps: int, window: int,
+                kernel: bool, interpret: bool) -> InterleavedGrid:
     table = jnp.asarray(tag_table, jnp.int32)
     costs = jnp.asarray(instr_costs, jnp.int32)
     fleets = jnp.asarray(fleets, jnp.int32)
@@ -305,6 +333,11 @@ def sweep_preempted(fleets: jnp.ndarray, tag_table: jnp.ndarray,
     # the scan path does: (B, P, N) tag and hw-cost streams
     ptags = jax.vmap(lambda f: jnp.take_along_axis(table, f, axis=1))(fleets)
     pcosts = costs[fleets]
+    if kernel:
+        return InterleavedGrid(*window_distance.window_grid(
+            ptags, pcosts, slot_counts, miss_latencies, quanta, schedule,
+            handler, bs_miss_extra, num_tags=num_tags,
+            total_steps=total_steps, window=window, interpret=interpret))
 
     def one(pt, pc, s, lat, qv):
         return _simulate_cell(pt, pc, s, lat, qv, schedule,
@@ -320,3 +353,29 @@ def sweep_preempted(fleets: jnp.ndarray, tag_table: jnp.ndarray,
                               jnp.asarray(slot_counts, jnp.int32),
                               jnp.asarray(miss_latencies, jnp.int32),
                               jnp.asarray(quanta, jnp.int32)))
+
+
+def sweep_preempted(fleets: jnp.ndarray, tag_table: jnp.ndarray,
+                    instr_costs: jnp.ndarray, slot_counts: jnp.ndarray,
+                    miss_latencies: jnp.ndarray, quanta: jnp.ndarray,
+                    schedule: jnp.ndarray, handler, bs_miss_extra, *,
+                    num_tags: int, total_steps: int, window: int,
+                    use_kernel=None) -> InterleavedGrid:
+    """Preempted-fleet sweep: (B, P, N) traces -> InterleavedGrid.
+
+    `tag_table` is the (P, num_opcodes) per-program instr->tag table,
+    `instr_costs` the shared (num_opcodes,) hw-cycle table, `quanta` the
+    (Q, P) swept per-program quantum grid, `schedule` the weighted
+    round-robin turn order.  Every {quantum x fleet x slot count x miss
+    latency} cell runs its own interleaving (the switch points are
+    cost-dependent, see module docstring); cells are independent, so the
+    grid is a vmap^4 over one cell engine — or, under `use_kernel` (see
+    module docstring), one fused Pallas kernel whose grid is the cell
+    grid — axis order matching the scan's `simulator._sweep_fleet`.
+    """
+    kernel, interpret = window_distance.resolve(use_kernel)
+    return _sweep_impl(fleets, tag_table, instr_costs, slot_counts,
+                       miss_latencies, quanta, schedule, handler,
+                       bs_miss_extra, num_tags=num_tags,
+                       total_steps=total_steps, window=window,
+                       kernel=kernel, interpret=interpret)

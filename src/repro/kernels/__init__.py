@@ -1,3 +1,16 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the repo's compute hot-spots.
+
+`repro.kernels.ops` wraps the model-zoo kernels (flash/decode attention,
+MoE GMM, RG-LRU and RWKV6 scans) with interpret-mode auto-selection; the
+window-distance kernel — the interleaved sweep engine's fused window
+pass — is re-exported here next to them (see the README kernels table).
+"""
+from repro.kernels.ops import (decode_attention, flash_attention, moe_gmm,
+                               rglru_scan, rwkv6_scan)
+from repro.kernels.window_distance import window_cell, window_grid
+
+__all__ = ["decode_attention", "flash_attention", "moe_gmm", "rglru_scan",
+           "rwkv6_scan", "window_cell", "window_grid"]
