@@ -158,6 +158,14 @@ def bench_model_serve_study():
     return lines, head[2:]
 
 
+def bench_fleet_scale_study():
+    """Incremental vs full per-epoch re-solve at datacenter fleet sizes."""
+    from benchmarks import fleet_scale_study
+    lines, _ = fleet_scale_study.run()
+    head = [l for l in lines if l.startswith("# finding")][0]
+    return lines, head[2:]
+
+
 def bench_window_kernel():
     """Fused window-distance kernel vs the jnp window pass (parity first)."""
     from benchmarks import window_kernel
@@ -182,6 +190,7 @@ BENCHES = {
     "online_churn": bench_online_churn,
     "chaos_serve": bench_chaos_serve,
     "model_serve_study": bench_model_serve_study,
+    "fleet_scale_study": bench_fleet_scale_study,
     "window_kernel": bench_window_kernel,
 }
 
@@ -205,6 +214,7 @@ MODULE_OF = {
     "online_churn": "online_churn",
     "chaos_serve": "chaos_serve",
     "model_serve_study": "model_serve_study",
+    "fleet_scale_study": "fleet_scale_study",
     "window_kernel": "window_kernel",
 }
 EXCLUDED = {
@@ -232,18 +242,40 @@ def audit_registration() -> None:
             f"stale references={sorted(stale)}")
 
 
-def _record_fleet_json(results: dict) -> None:
+PROVENANCE_KEYS = ("backend", "device", "platform_version")
+
+
+def _record_fleet_json(results: dict, path: str = FLEET_JSON) -> None:
     """Merge this run's {bench: {us_per_call, derived}} into BENCH_fleet.json
-    at the repo root, preserving entries for modules not run this time."""
+    at the repo root, preserving entries for modules not run this time.
+
+    Preserved entries must carry {backend, device, platform_version}
+    provenance.  A legacy entry written before the per-backend keying
+    migration has none — merging it forward would hand the perf gate a
+    number it cannot attribute to a backend and would happily compare
+    same-backend, so legacy entries are dropped (the next full run
+    re-records them with provenance), and the merged result is asserted
+    clean before it is written."""
     existing: dict = {}
-    if os.path.exists(FLEET_JSON):
+    if os.path.exists(path):
         try:
-            with open(FLEET_JSON) as f:
+            with open(path) as f:
                 existing = json.load(f)
         except (json.JSONDecodeError, OSError):
             existing = {}
+    dropped = [name for name, entry in existing.items()
+               if name not in results
+               and any(k not in entry for k in PROVENANCE_KEYS)]
+    for name in dropped:
+        print(f"# dropping provenance-free legacy entry {name!r} from "
+              f"{os.path.basename(path)} (re-run it to re-record)")
+        del existing[name]
     existing.update(results)
-    with open(FLEET_JSON, "w") as f:
+    bad = sorted(name for name, entry in existing.items()
+                 if any(k not in entry for k in PROVENANCE_KEYS))
+    assert not bad, (
+        f"entries {bad} lack {PROVENANCE_KEYS} provenance after merge")
+    with open(path, "w") as f:
         json.dump(existing, f, indent=2)
 
 

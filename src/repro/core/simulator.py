@@ -1358,6 +1358,16 @@ def _fleet_mesh():
     return jax.sharding.Mesh(np.array(devs), ("fleet",))
 
 
+def fleet_mesh_size() -> int:
+    """Devices the interleaved sweep shards its fleet axis over (1 on
+    single-device hosts).  Batch-building callers (the contention
+    model's candidate-group sweeps) round their batch shapes to a
+    multiple of this so every shard is full and the padded shape is
+    reused across calls."""
+    mesh = _fleet_mesh()
+    return int(mesh.devices.size) if mesh is not None else 1
+
+
 def _mesh_sweep_preempted(mesh, part, table, counts, lats, quanta_grid,
                           schedule, handler, bs_miss_extra, num_tags: int,
                           total_steps: int, w: int, use_kernel):

@@ -29,6 +29,12 @@ programs should share a core in the first place:
                   delta minus a *measured* warm-state migration penalty
                   (resume-on-cold-core probe);
                   `SlotServeEngine.serve_online` is the serving entry;
+  * `topology`  — `Topology` places the cores within sockets within
+                  hosts: each host is an independently (and
+                  incrementally) re-solved placement domain, and moves
+                  crossing a socket or host pay a LUTstructions-style
+                  bitstream re-load surcharge on top of the measured
+                  probe (`place_fleet` is the static per-host entry);
   * `faults`    — deterministic fault injection for the online loop: a
                   seeded `FaultPlan` schedules epoch-aligned core losses,
                   slot SEUs, bitstream flushes and reconfig stalls, which
@@ -38,20 +44,23 @@ programs should share a core in the first place:
 from repro.sched.admission import AdmissionController, AdmissionDecision
 from repro.sched.faults import (FAULT_KINDS, RECOVERY_POLICIES, FaultEvent,
                                 FaultPlan)
-from repro.sched.online import (OnlineConfig, OnlineReplacer, OnlineReport,
-                                TenantEvent)
+from repro.sched.online import (RESOLVE_MODES, OnlineConfig, OnlineReplacer,
+                                OnlineReport, TenantEvent)
 from repro.sched.placement import (ContentionModel, Placement,
                                    PlacementConfig, fifo_placement,
-                                   place_tenants, random_placement,
-                                   score_placement)
+                                   place_fleet, place_tenants,
+                                   random_placement, score_placement)
 from repro.sched.policy import PriorityPolicy, quantum_grid
+from repro.sched.topology import DISTANCES, Topology
 
 __all__ = [
     "AdmissionController", "AdmissionDecision",
     "ContentionModel", "Placement", "PlacementConfig",
-    "fifo_placement", "place_tenants", "random_placement",
+    "fifo_placement", "place_fleet", "place_tenants", "random_placement",
     "score_placement",
     "OnlineConfig", "OnlineReplacer", "OnlineReport", "TenantEvent",
+    "RESOLVE_MODES",
     "FAULT_KINDS", "RECOVERY_POLICIES", "FaultEvent", "FaultPlan",
+    "DISTANCES", "Topology",
     "PriorityPolicy", "quantum_grid",
 ]

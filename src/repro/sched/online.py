@@ -46,6 +46,30 @@ and materialises S' back out, bit-for-bit equal to the scan).  The
 cycle-by-cycle scan only returns for caches no scan could have produced
 or cold bitstream caches — in a fault-free serve, neither occurs.
 
+Topology & fleet scale (`repro.sched.topology`): the fleet is a
+`Topology` (cores within sockets within hosts, default
+`Topology.flat(num_cores)` — the historical single-board pool).  Two
+things tier by it:
+
+  * **migration pricing** — `migration_penalty(name, dst)` adds the
+    LUTstructions re-load surcharge on top of the measured warm-resume
+    probe when the move crosses a socket or a host
+    (`resident bitstreams x bs_miss_extra x tier multiplier`); within a
+    socket the measured probe alone is the price, exactly as before;
+  * **the per-epoch re-solve** — each *host* is a placement domain
+    solved independently (`place_tenants` over the host's up cores), so
+    the swap frontier is O(T_h^2) per host instead of O(T^2) over the
+    fleet.  The re-solve is *incremental* by default: a domain's solved
+    target assignment is cached, and only domains dirtied since the
+    last epoch (arrivals, departures, applied moves, evacuations,
+    faults, repairs) are re-solved — a quiet epoch at 1000 tenants
+    re-prices nothing.  `resolve_mode="full"` re-solves every domain
+    every epoch; both modes are bit-for-bit identical (the cache is
+    pure memoisation of a deterministic solve — asserted across the
+    churn/chaos streams by tests/test_fleet_scale.py and at fleet scale
+    by benchmarks/fleet_scale_study.py), and `resolve_log` records
+    per-epoch solved/cached domain counts and wall time.
+
 Fault tolerance (`repro.sched.faults`): a seeded `FaultPlan` injects
 epoch-aligned core losses, slot SEUs, bitstream flushes and reconfig
 stalls.  The replacer detects each fault at its epoch, evacuates tenants
@@ -64,6 +88,7 @@ bit-for-bit (`run(checkpoint_every=..., save_fn=...)`).
 from __future__ import annotations
 
 import copy
+import time
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
@@ -73,13 +98,19 @@ from repro.core import simulator, slots
 from repro.sched.faults import RECOVERY_POLICIES, FaultPlan
 from repro.sched.placement import (ContentionModel, PlacementConfig,
                                    place_tenants)
+from repro.sched.topology import Topology
 
 __all__ = [
     "TenantEvent", "OnlineConfig", "OnlineReport", "OnlineReplacer",
-    "POLICIES",
+    "POLICIES", "RESOLVE_MODES",
 ]
 
 POLICIES = ("never", "always", "warm")
+RESOLVE_MODES = ("incremental", "full")
+
+# snapshot schema versions `OnlineReplacer.restore` understands: 1 is the
+# PR-7 pre-topology layout (implicitly flat), 2 adds the topology geometry
+SUPPORTED_SNAPSHOT_VERSIONS = (1, 2)
 
 
 @dataclass(frozen=True)
@@ -113,6 +144,11 @@ class OnlineConfig:
     resume window of the migration-penalty measurement.  `placement`
     carries the simulator geometry (slots, miss latency, quantum) shared
     by the epoch scans, the contention model, and the probes.
+
+    `topology` (a `repro.sched.topology.Topology`) places the cores
+    within sockets within hosts; when given, it *defines* `num_cores`.
+    The default is `Topology.flat(num_cores)` — one host, one socket —
+    which reproduces the pre-topology serve bit-for-bit.
     """
 
     num_cores: int = 2
@@ -124,8 +160,18 @@ class OnlineConfig:
     bs_cache_entries: int = 64
     bs_miss_extra: int = 100
     placement: PlacementConfig = field(default_factory=PlacementConfig)
+    topology: Topology | None = None
 
     def __post_init__(self):
+        if self.topology is None:
+            object.__setattr__(self, "topology",
+                               Topology.flat(self.num_cores))
+        elif not isinstance(self.topology, Topology):
+            raise TypeError(
+                f"topology must be a repro.sched.topology.Topology, got "
+                f"{type(self.topology).__name__}")
+        else:
+            object.__setattr__(self, "num_cores", self.topology.num_cores)
         if self.num_cores < 1:
             raise ValueError(f"num_cores must be >= 1, got {self.num_cores}")
         if self.epoch_steps < 1 or self.probe_steps < 1:
@@ -224,10 +270,15 @@ class OnlineReplacer:
                  policy: str = "warm", *,
                  faults: FaultPlan | None = None,
                  recovery: str = "warm",
-                 backoff_cap: int = 8):
+                 backoff_cap: int = 8,
+                 resolve_mode: str = "incremental"):
         if policy not in POLICIES:
             raise ValueError(
                 f"unknown policy {policy!r}, expected one of {POLICIES}")
+        if resolve_mode not in RESOLVE_MODES:
+            raise ValueError(
+                f"unknown resolve_mode {resolve_mode!r}, expected one of "
+                f"{RESOLVE_MODES}")
         if recovery not in RECOVERY_POLICIES:
             raise ValueError(
                 f"unknown recovery policy {recovery!r}, expected one of "
@@ -250,6 +301,7 @@ class OnlineReplacer:
         self.faults = faults
         self.recovery = recovery
         self.backoff_cap = backoff_cap
+        self.resolve_mode = resolve_mode
         self.tenants: dict[str, _TenantRun] = {}
         self.departed: list[_TenantRun] = []
         self.cores = [_Core(self.cfg) for _ in range(self.cfg.num_cores)]
@@ -262,6 +314,15 @@ class OnlineReplacer:
         # destination back off exponentially (capped) before retrying
         self._retry: dict[str, dict] = {}
         self._epoch = 0                      # next epoch run() executes
+        # incremental re-solve state: per-host cached target assignments
+        # (the kept swap frontier) and the set of hosts dirtied since the
+        # last re-solve.  Everything starts dirty; `resolve_log` records
+        # per-epoch solved/cached domain counts + wall time (telemetry
+        # only — never part of the report or a snapshot, so restored
+        # serves stay bit-for-bit comparable)
+        self._domain_target: dict[int, dict[str, int]] = {}
+        self._dirty: set[int] = set(range(self.cfg.topology.num_hosts))
+        self.resolve_log: list[dict] = []
 
     # ------------------------------------------------------------------
     # roster bookkeeping
@@ -270,12 +331,33 @@ class OnlineReplacer:
         return sorted((t for t in self.tenants.values() if t.core == core),
                       key=lambda t: t.name)
 
+    def _core_map(self) -> dict[int, list[_TenantRun]]:
+        """core index -> name-sorted members, built in ONE O(T) pass.
+        The fleet-scale hot paths (arrival candidate scoring, unit
+        pricing, the per-domain re-solve) take this precomputed map
+        instead of calling `_members` per core — a per-core scan made
+        arrivals O(T x C) and unit pricing O(T x units), hopeless at
+        1000 tenants."""
+        cm: dict[int, list[_TenantRun]] = {}
+        for name in sorted(self.tenants):
+            t = self.tenants[name]
+            cm.setdefault(t.core, []).append(t)
+        return cm
+
     def _groups(self) -> list[tuple[str, ...]]:
-        return [tuple(sorted(t.bench for t in self._members(c)))
+        cm = self._core_map()
+        return [tuple(sorted(t.bench for t in cm.get(c, [])))
                 for c in range(self.cfg.num_cores)]
 
     def _up_cores(self) -> list[int]:
         return [ci for ci in range(self.cfg.num_cores) if self.cores[ci].up]
+
+    def _mark_dirty(self, core: int) -> None:
+        """Record that `core`'s host must be re-solved next epoch (its
+        roster, up-set or current assignment changed).  Stranded tenants
+        (core < 0) belong to no domain until recovery places them."""
+        if core >= 0:
+            self._dirty.add(self.cfg.topology.host_of(core))
 
     def _predict_on(self, pairs) -> list:
         """Predict each (core, group) pair's slowdowns at that core's
@@ -304,17 +386,19 @@ class OnlineReplacer:
             # fully-dark fleet: the tenant strands until a core repairs
             self.tenants[name] = _TenantRun(name, bench, -1)
             return
-        counts = [len(self._members(c)) for c in up]
+        cm = self._core_map()
+        counts = [len(cm.get(c, [])) for c in up]
         open_cores = [c for c, n in zip(up, counts) if n == min(counts)]
         # among least-loaded up cores, join the one whose resulting group
         # predicts the best (worst, mean) slowdown — greedy, no migration
-        cand = [tuple(sorted([t.bench for t in self._members(c)] + [bench]))
+        cand = [tuple(sorted([t.bench for t in cm.get(c, [])] + [bench]))
                 for c in open_cores]
         preds = self._predict_on(list(zip(open_cores, cand)))
         best = min(range(len(open_cores)),
                    key=lambda i: (float(np.max(preds[i])),
                                   float(np.mean(preds[i])), i))
         self.tenants[name] = _TenantRun(name, bench, open_cores[best])
+        self._mark_dirty(open_cores[best])
 
     def _depart(self, name: str) -> None:
         if name not in self.tenants:
@@ -322,6 +406,7 @@ class OnlineReplacer:
         # the core keeps its caches — a departed tenant's residents decay
         # naturally under LRU as the survivors run; the service record is
         # archived so the final report scores every tenant ever served
+        self._mark_dirty(self.tenants[name].core)
         self.departed.append(self.tenants.pop(name))
 
     # ------------------------------------------------------------------
@@ -342,6 +427,7 @@ class OnlineReplacer:
             core.repair_degraded = 0
             core.slot_st = slots.init(self.cfg.placement.num_slots)
             core.bs_st = slots.init(self.cfg.bs_cache_entries)
+            self._mark_dirty(ci)           # up-set changed: host re-solves
             self.fault_log.append({"epoch": epoch, "kind": "repair",
                                    "core": ci,
                                    "active_slots": core.active_slots})
@@ -380,6 +466,11 @@ class OnlineReplacer:
                 core.stall_until = max(core.stall_until,
                                        epoch + ev.stall_epochs)
                 rec["stall_until"] = core.stall_until
+            # conservative: any fault on the core dirties its host (a
+            # core_loss changes the up-set; the rest are over-marking,
+            # which only re-solves more — under-marking would break the
+            # incremental == full guarantee)
+            self._mark_dirty(ev.core)
             self.fault_log.append(rec)
             any_fault = True
         return any_fault
@@ -443,8 +534,10 @@ class OnlineReplacer:
         # up core is stalled, attempts go through backoff and retry later
         avail = [c for c in up
                  if epoch >= self.cores[c].stall_until] or up
+        topo = self.cfg.topology
+        cm = self._core_map()
         for t in stranded:
-            cand = [tuple(sorted([m.bench for m in self._members(c)]
+            cand = [tuple(sorted([m.bench for m in cm.get(c, [])]
                                  + [t.bench])) for c in avail]
             preds = self._predict_on(list(zip(avail, cand)))
             best = min(range(len(avail)),
@@ -456,14 +549,28 @@ class OnlineReplacer:
                                       why="evacuation"):
                 continue
             cold = self._cold_resume_cycles(t, dst)
+            # a cross-socket/host evacuation additionally re-loads every
+            # warm bitstream the tenant leaves behind (LUTstructions tier
+            # surcharge); the move is mandatory so the cost lands as
+            # denied-service stall, not as a gate
+            reload = self.reload_cycles(t.name, dst) if src >= 0 else 0.0
             retries = self._retry.pop(t.name, {"retries": 0})["retries"]
+            if src in cm:
+                cm[src] = [m for m in cm[src] if m.name != t.name]
             t.core = dst
+            cm.setdefault(dst, []).append(t)
             t.evacuations += 1
+            t.stall_cycles += reload
             self.evacuations += 1
-            self.fault_log.append({
-                "epoch": epoch, "kind": "evacuation", "tenant": t.name,
-                "src": src, "dst": dst, "retries": retries,
-                "cold_resume_cycles": cold})
+            self._mark_dirty(src)
+            self._mark_dirty(dst)
+            rec = {"epoch": epoch, "kind": "evacuation", "tenant": t.name,
+                   "src": src, "dst": dst, "retries": retries,
+                   "cold_resume_cycles": cold}
+            if src >= 0:
+                rec["distance"] = topo.distance(src, dst)
+                rec["reload_cycles"] = reload
+            self.fault_log.append(rec)
 
     # ------------------------------------------------------------------
     # epoch advance over resumable fleet state
@@ -472,11 +579,12 @@ class OnlineReplacer:
         pcfg = self.cfg.placement
         sched = pcfg.scheduler()
         rcfg = self.cfg.reconfig()
+        core_map = self._core_map()
         for ci in range(self.cfg.num_cores):
             core = self.cores[ci]
             if not core.up:
                 continue                   # stranded tenants accrue stall
-            members = self._members(ci)
+            members = core_map.get(ci, [])
             if not members:
                 continue
             tr = np.stack([np.asarray(self.model.trace(t.bench))
@@ -510,14 +618,47 @@ class OnlineReplacer:
     # ------------------------------------------------------------------
     # warm-state migration pricing
     # ------------------------------------------------------------------
-    def migration_penalty(self, name: str) -> float:
-        """Measured cost (cycles) of restarting `name` on a cold core.
+    def reload_cycles(self, name: str, dst: int) -> float:
+        """LUTstructions re-load surcharge of moving `name` to `dst`:
+        every one of the tenant's bitstreams warm on its *current* core
+        must be re-loaded across the interconnect, at `bs_miss_extra`
+        cycles each scaled by the topology's distance-tier multiplier.
+        Zero within a socket (the measured probe already prices that
+        tier) — so a flat topology prices every move exactly as before.
+        """
+        t = self.tenants[name]
+        topo = self.cfg.topology
+        if t.core < 0:
+            return 0.0          # stranded: no warm state to leave behind
+        mult = topo.reload_multiplier(topo.distance(t.core, dst))
+        if mult == 0.0:
+            return 0.0
+        tag_row = np.asarray(self.model.scenario_of(t.bench).instr_tag)
+        tags = np.unique(tag_row[np.asarray(self.model.trace(t.bench))])
+        tags = tags[tags >= 0]
+        if tags.size == 0:
+            return 0.0
+        res = slots.resident_many(self.cores[t.core].bs_st,
+                                  jnp.asarray(tags, jnp.int32))
+        resident = int(np.sum(np.asarray(res)))
+        return float(resident * self.cfg.bs_miss_extra * mult)
 
-        Resumes the tenant's state solo for `probe_steps` twice — from its
-        current core's warm caches and from a cold `init_fleet_state` —
-        and returns the cycle difference.  This is the LUTstructions
-        quantity: how many cycles of reconfiguration/bitstream re-loading
-        the destination core charges before the tenant is warm again.
+    def migration_penalty(self, name: str, dst: int | None = None) -> float:
+        """Cost (cycles) of restarting `name` on another core.
+
+        The base is *measured*: the tenant's state is resumed solo for
+        `probe_steps` twice — from its current core's warm caches and
+        from a cold `init_fleet_state` — and the penalty is the cycle
+        difference.  This is the LUTstructions quantity: how many cycles
+        of reconfiguration/bitstream re-loading the destination core
+        charges before the tenant is warm again.
+
+        With a destination, the move's distance tier adds the modelled
+        `reload_cycles` surcharge on top: cross-socket and cross-host
+        moves must re-load the mover's resident bitstreams over the
+        interconnect, which the local probe cannot see.  `dst=None` (or
+        any intra-socket destination) is the bare probe, bit-identical
+        to the pre-topology pricing.
         """
         t = self.tenants[name]
         pcfg = self.cfg.placement
@@ -539,7 +680,10 @@ class OnlineReplacer:
                                         state=cold, **kw)
         res_w = simulator.simulate_many(tr, rcfg, scen, sched,
                                         state=warm, num_active=na, **kw)
-        return float(int(res_c.cycles[0]) - int(res_w.cycles[0]))
+        probe = float(int(res_c.cycles[0]) - int(res_w.cycles[0]))
+        if dst is None:
+            return probe
+        return probe + self.reload_cycles(name, dst)
 
     def warm_fraction(self, name: str) -> float:
         """Fraction of the tenant's slotted tag set resident on its core's
@@ -572,19 +716,27 @@ class OnlineReplacer:
         solo = np.array([self.model.solo_cpi(b) for b in sorted(group)])
         return float(np.sum(pred * solo * share))
 
-    def move_benefit(self, moves: dict[str, int]) -> float:
+    def move_benefit(self, moves: dict[str, int],
+                     core_map: dict[int, list] | None = None) -> float:
         """Predicted contention delta (cycles/epoch) of applying `moves`
         (tenant name -> destination core) atomically: old-cost minus
         new-cost summed over every affected core.  A cross-core swap must
         be priced as one unit — each leg alone transits through a
-        lopsided group and would misprice the exchange."""
+        lopsided group and would misprice the exchange.  Pass `core_map`
+        (a `_core_map()` snapshot of the current membership) to avoid the
+        O(tenants) rebuild per call on the rebalance hot path."""
+        if core_map is None:
+            core_map = self._core_map()
         affected = {self.tenants[n].core for n in moves} | set(moves.values())
         old = new = 0.0
-        for ci in range(self.cfg.num_cores):
-            if ci not in affected:
+        # ascending core order keeps the float summation order identical
+        # to the historical full scan over range(num_cores)
+        for ci in sorted(affected):
+            if ci < 0:
                 continue
-            cur = [t.bench for t in self._members(ci)]
-            nxt = [t.bench for t in self._members(ci)
+            members = core_map.get(ci, [])
+            cur = [t.bench for t in members]
+            nxt = [t.bench for t in members
                    if t.name not in moves or moves[t.name] == ci]
             nxt += [self.tenants[n].bench for n, dst in moves.items()
                     if dst == ci and self.tenants[n].core != ci]
@@ -595,23 +747,28 @@ class OnlineReplacer:
     # ------------------------------------------------------------------
     # per-epoch re-solve
     # ------------------------------------------------------------------
-    def _target_assignment(self) -> dict[str, int]:
-        """Re-solve placement for the current roster and align the solved
-        cores to physical cores by membership overlap (a re-solve that
-        merely permutes core labels must imply zero moves).  Only tenants
-        on *up* cores are re-solved: stranded tenants come back through
-        the recovery path (`_recover`), never through rebalancing — the
-        separation keeps the recovery-policy comparison honest."""
-        up = self._up_cores()
-        roster = {t.name: t.bench for t in self.tenants.values()
-                  if t.core in up}
+    def _solve_domain(self, host: int,
+                      core_map: dict[int, list]) -> dict[str, int]:
+        """Re-solve placement for one host's roster and align the solved
+        cores to the host's physical cores by membership overlap (a
+        re-solve that merely permutes core labels must imply zero moves).
+        Only tenants on *up* cores are re-solved: stranded tenants come
+        back through the recovery path (`_recover`), never through
+        rebalancing — the separation keeps the recovery-policy comparison
+        honest.  Deterministic given the host's roster and up-set, which
+        is what makes the incremental cache pure memoisation."""
+        up = [c for c in self.cfg.topology.cores_of_host(host)
+              if self.cores[c].up]
+        roster = {t.name: t.bench
+                  for c in up for t in core_map.get(c, [])}
         if len(roster) < 2 or not up:
             return {}
         pl = place_tenants(roster, min(len(up), len(roster)), self.model)
         solved = [set(core) for core in pl.cores]
         unassigned = set(up)
         target: dict[str, int] = {}
-        current = {t.name: t.core for t in self.tenants.values()}
+        current = {t.name: t.core
+                   for c in up for t in core_map.get(c, [])}
         order = sorted(
             range(len(solved)),
             key=lambda si: -len(solved[si]))
@@ -621,6 +778,38 @@ class OnlineReplacer:
             unassigned.discard(best)
             for n in solved[si]:
                 target[n] = best
+        return target
+
+    def _target_assignment(self, epoch: int | None = None) -> dict[str, int]:
+        """Per-epoch re-solve: each host is an independent placement
+        domain (`_solve_domain`).  In the default incremental mode only
+        domains dirtied since the last re-solve run the greedy + swap
+        search; clean domains reuse their cached target — bit-for-bit
+        the same answer, because the domain solve is a deterministic
+        function of the host's roster/up-set and every mutation of
+        either marks the host dirty.  `resolve_mode="full"` re-solves
+        every domain every epoch (the parity baseline)."""
+        topo = self.cfg.topology
+        core_map = self._core_map()
+        t0 = time.perf_counter()
+        dirty = (set(range(topo.num_hosts))
+                 if self.resolve_mode == "full" else set(self._dirty))
+        solved = 0
+        target: dict[str, int] = {}
+        for host in range(topo.num_hosts):
+            if host in dirty:
+                self._domain_target[host] = self._solve_domain(
+                    host, core_map)
+                solved += 1
+            target.update(self._domain_target.get(host, {}))
+        self._dirty.clear()
+        self.resolve_log.append({
+            "epoch": self._epoch if epoch is None else epoch,
+            "mode": self.resolve_mode,
+            "solved": solved,
+            "cached": topo.num_hosts - solved,
+            "seconds": time.perf_counter() - t0,
+        })
         return target
 
     def _exchange_units(self, target: dict[str, int]) -> list[tuple]:
@@ -653,20 +842,26 @@ class OnlineReplacer:
         """One re-placement round; returns how many tenants moved."""
         if self.policy == "never":
             return 0
-        target = self._target_assignment()
+        target = self._target_assignment(epoch)
         if not target:
             return 0
+        topo = self.cfg.topology
         units = self._exchange_units(target)
         moved = 0
         # most beneficial unit first; re-price against the *current*
         # membership before each apply (an earlier unit changes groups)
         while units and moved < self.cfg.max_moves_per_epoch:
-            scored = [(self.move_benefit({n: target[n] for n in u}), u)
+            core_map = self._core_map()
+            scored = [(self.move_benefit({n: target[n] for n in u},
+                                         core_map), u)
                       for u in units]
             scored.sort(key=lambda x: (-x[0], x[1]))
             benefit, unit = scored[0]
             units.remove(unit)
-            penalty = sum(self.migration_penalty(n) for n in unit)
+            # tiered penalty: measured warm-resume probe plus the
+            # distance-dependent re-load surcharge of each leg
+            penalty = sum(self.migration_penalty(n, target[n])
+                          for n in unit)
             net = benefit - penalty
             take = self.policy == "always" or net > 0.0
             blocked = False
@@ -681,6 +876,9 @@ class OnlineReplacer:
                 "epoch": epoch, "tenants": unit,
                 "src": tuple(self.tenants[n].core for n in unit),
                 "dst": tuple(target[n] for n in unit),
+                "distance": tuple(
+                    topo.distance(self.tenants[n].core, target[n])
+                    for n in unit),
                 "benefit_cycles": benefit, "penalty_cycles": penalty,
                 "net_cycles": net,
                 "warm_fraction": tuple(self.warm_fraction(n)
@@ -693,7 +891,9 @@ class OnlineReplacer:
             if take:
                 for n in unit:
                     self._retry.pop(n, None)
+                    self._mark_dirty(self.tenants[n].core)
                     self.tenants[n].core = target[n]
+                    self._mark_dirty(target[n])
                     self.tenants[n].migrations += 1
                     self.migrations += 1
                     moved += 1
@@ -760,11 +960,12 @@ class OnlineReplacer:
                 if t.core < 0 or not self.cores[t.core].up:
                     t.stall_cycles += (self.cfg.epoch_steps
                                        * self.model.solo_cpi(t.bench))
+            cm = self._core_map()
             row = {
                 "epoch": epoch,
                 "tenants": len(self.tenants),
                 "moved": moved,
-                "cores": tuple(tuple(t.name for t in self._members(c))
+                "cores": tuple(tuple(t.name for t in cm.get(c, []))
                                for c in range(self.cfg.num_cores)),
             }
             if self.faults is not None:
@@ -808,10 +1009,11 @@ class OnlineReplacer:
                     "stall_cycles": t.stall_cycles}
 
         return {
-            "version": 1,
+            "version": 2,
             "epoch": self._epoch,
             "policy": self.policy,
             "recovery": self.recovery,
+            "topology": self.cfg.topology.geometry(),
             "num_cores": self.cfg.num_cores,
             "num_slots": self.cfg.placement.num_slots,
             "bs_entries": self.cfg.bs_cache_entries,
@@ -831,10 +1033,20 @@ class OnlineReplacer:
         """Load a `snapshot` into this replacer; the next `run` resumes
         at the snapshot's epoch.  The replacer must be constructed with
         the same config/policy/recovery/fault plan as the one that saved
-        the snapshot."""
-        if snap.get("version") != 1:
+        the snapshot.  Version 1 snapshots (pre-topology) carry no
+        geometry and load only onto a flat topology."""
+        version = snap.get("version")
+        if version not in SUPPORTED_SNAPSHOT_VERSIONS:
             raise ValueError(
-                f"unknown snapshot version {snap.get('version')!r}")
+                f"unknown snapshot version {version!r}; this replacer "
+                f"supports versions {SUPPORTED_SNAPSHOT_VERSIONS} — a "
+                f"newer writer's snapshot cannot be silently misread")
+        geo = tuple(snap.get("topology", (1, 1, snap["num_cores"])))
+        if geo != self.cfg.topology.geometry():
+            raise ValueError(
+                f"snapshot topology {geo} (hosts, sockets/host, "
+                f"cores/socket) does not match this replacer's "
+                f"{self.cfg.topology.geometry()}")
         for key, mine in (("policy", self.policy),
                           ("recovery", self.recovery),
                           ("num_cores", self.cfg.num_cores),
@@ -880,6 +1092,12 @@ class OnlineReplacer:
         self.fault_log = copy.deepcopy(snap["fault_log"])
         self.epoch_log = copy.deepcopy(snap["epoch_log"])
         self._epoch = snap["epoch"]
+        # the incremental cache never travels in a snapshot: everything
+        # starts dirty, so the first resumed epoch re-solves every domain
+        # — pure memoisation of a deterministic solve, so the resumed
+        # serve stays bit-for-bit identical to the uninterrupted one
+        self._domain_target = {}
+        self._dirty = set(range(self.cfg.topology.num_hosts))
 
     # ------------------------------------------------------------------
     def _report(self, num_epochs: int) -> OnlineReport:

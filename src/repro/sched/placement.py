@@ -37,10 +37,11 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import isa, simulator
+from repro.sched.topology import Topology
 
 __all__ = [
     "PlacementConfig", "ContentionModel", "Placement",
-    "place_tenants", "score_placement", "fifo_placement",
+    "place_tenants", "place_fleet", "score_placement", "fifo_placement",
     "random_placement",
 ]
 
@@ -183,6 +184,16 @@ class ContentionModel:
         return self._solo_miss_rate[bench]
 
     # ------------------------------------------------------------------
+    def _cache_key(self, group, num_slots: int) -> tuple:
+        """Canonical prediction-cache key: (sorted bench multiset, slot
+        width).  Every lookup AND store routes through this one function
+        — the PR 7 degraded-width keys special-cased the full width,
+        which left two keying conventions that could drift apart: a
+        permuted group priced at a degraded width must hit the same
+        entry as its sorted twin, and a degraded prediction must never
+        alias (or be served from) the full-width one."""
+        return (tuple(sorted(group)), int(num_slots))
+
     def predict(self, groups, *, num_slots: int | None = None
                 ) -> list[np.ndarray]:
         """Per-tenant slowdown vectors for a sequence of bench groups.
@@ -191,33 +202,37 @@ class ContentionModel:
         vector is ordered like `tuple(sorted(group))`).  All uncached
         groups sharing a (size, per-program taxonomy) signature are
         simulated in a single `sweep_fleet` call — with no per-tenant
-        scenario mapping that is exactly "one call per size".
+        scenario mapping that is exactly "one call per size".  Batches
+        pad to power-of-two sizes rounded up to a multiple of the device
+        count (`simulator.fleet_mesh_size`), so on multi-device hosts
+        every candidate-group sweep shards evenly across the fleet mesh
+        (a no-op on single-device hosts: the historical shapes are
+        already multiples of 1).
 
         `num_slots` prices the group on a core with fewer usable slots
         (a fault-degraded core, `repro.sched.faults`): the candidate
         sweep runs at that slot count while the solo reference stays at
         full width, so a degraded core's predictions are intrinsically
         down-weighted — the extra thrashing of the smaller disambiguator
-        shows up as extra slowdown.  Predictions are cached per
-        (group, slot count); the default width keeps the historical
-        cache keys.
+        shows up as extra slowdown.  Predictions are cached under the
+        canonical `_cache_key` (group multiset, width) for every width,
+        the default full width included.
         """
         ns = self.cfg.num_slots if num_slots is None else int(num_slots)
         if not 1 <= ns <= self.cfg.num_slots:
             raise ValueError(
                 f"num_slots must be in [1, {self.cfg.num_slots}] (the "
                 f"configured core width), got {num_slots}")
-        ckey = ((lambda k: k) if ns == self.cfg.num_slots
-                else (lambda k: (k, ns)))
-        keys = [tuple(sorted(g)) for g in groups]
+        keys = [self._cache_key(g, ns) for g in groups]
         todo: dict[tuple, list[tuple[str, ...]]] = {}
-        for k in dict.fromkeys(keys):      # unique, order-preserving
-            if k and ckey(k) not in self._groups:
+        for k, _ in dict.fromkeys(keys):   # unique, order-preserving
+            if k and self._cache_key(k, ns) not in self._groups:
                 sig = tuple(self.scenario_of(b).name for b in k)
                 todo.setdefault((len(k), sig), []).append(k)
+        ndev = simulator.fleet_mesh_size()
         for (size, _sig), ks in sorted(todo.items()):
             self._ensure_solo([b for k in ks for b in k])
-            pad = _pad_pow2(len(ks))
+            pad = -(-_pad_pow2(len(ks)) // ndev) * ndev
             batch = ks + [ks[0]] * (pad - len(ks))
             tensor = np.stack([np.stack([self.trace(b) for b in k])
                                for k in batch])
@@ -237,10 +252,10 @@ class ContentionModel:
                 slow = cpis[gi] / solo
                 # a tenant the rotation never reached has no CPI: treat as
                 # unboundedly contended, never as "free"
-                self._groups[ckey(k)] = np.where(instrs[gi] > 0, slow,
-                                                 np.inf)
-        return [self._groups[ckey(k)] if k else np.zeros((0,))
-                for k in keys]
+                self._groups[self._cache_key(k, ns)] = np.where(
+                    instrs[gi] > 0, slow, np.inf)
+        return [self._groups[key] if key[0] else np.zeros((0,))
+                for key in keys]
 
 
 # ---------------------------------------------------------------------------
@@ -386,3 +401,46 @@ def place_tenants(tenants: dict[str, str], num_cores: int,
         cores[a][i], cores[b][j] = cores[b][j], cores[a][i]
         current = best_pl
     return current
+
+
+def place_fleet(tenants: dict[str, str], topology: Topology,
+                model: ContentionModel | None = None, *,
+                max_rounds: int = 8) -> Placement:
+    """Topology-aware static placement over a whole fleet.
+
+    Partitions tenants across hosts, then runs the greedy + swap
+    `place_tenants` search independently inside each host (the placement
+    *domain* — swap moves may cross sockets within a host, never hosts),
+    so the cost is sum-over-hosts of O(T_h^2) instead of the flat pool's
+    O(T^2) swap frontier.  Tenants are dealt across hosts round-robin in
+    decreasing solo slot-miss-rate order, so the slot-hungriest tenants
+    spread out instead of piling onto host 0.  With `Topology.flat(C)`
+    (one host) this is exactly `place_tenants(tenants, C)`.
+
+    The returned `Placement.cores` tuple is ordered by global core index
+    (host-major), empty trailing cores of a host omitted — matching how
+    `score_placement` drops empty cores.
+    """
+    if not tenants:
+        raise ValueError("place_fleet needs at least one tenant")
+    model = model or ContentionModel()
+    model.warm(tenants.values())   # one batched solo sweep up front
+    order = sorted(tenants, key=lambda n: (-model.solo_miss_rate(tenants[n]),
+                                           n))
+    per_host: list[dict[str, str]] = [{} for _ in range(topology.num_hosts)]
+    for i, n in enumerate(order):
+        per_host[i % topology.num_hosts][n] = tenants[n]
+    cores: list[tuple[str, ...]] = []
+    per_tenant: dict[str, float] = {}
+    for roster in per_host:
+        if not roster:
+            continue
+        pl = place_tenants(roster,
+                           min(topology.cores_per_host, len(roster)),
+                           model, max_rounds=max_rounds)
+        cores.extend(pl.cores)
+        per_tenant.update(pl.tenant_slowdown)
+    vals = np.array(list(per_tenant.values()))
+    return Placement(cores=tuple(cores), tenant_slowdown=per_tenant,
+                     worst_slowdown=float(vals.max()),
+                     mean_slowdown=float(vals.mean()))
